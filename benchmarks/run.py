@@ -1,0 +1,49 @@
+"""Benchmark runner — one module per paper table (+ codec micro-bench and
+the dry-run roofline aggregation). Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table3     # one table
+  PYTHONPATH=src python -m benchmarks.run --fast     # tensor-error proxies
+                                                     # instead of probe-LM ppl
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    args = [a for a in sys.argv[1:]]
+    fast = "--fast" in args
+    args = [a for a in args if not a.startswith("--")]
+
+    from benchmarks import (
+        codec, roofline, table1_scheme_grid, table2_chosen, table3_ttft,
+        table4_sota, table5_ablation,
+    )
+
+    suites = {
+        "table1": lambda: table1_scheme_grid.main(fast=fast),
+        "table2": table2_chosen.main,
+        "table3": table3_ttft.main,
+        "table4": table4_sota.main,
+        "table5": table5_ablation.main,
+        "codec": codec.main,
+        "roofline": roofline.main,
+    }
+    selected = args or list(suites)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in selected:
+        try:
+            suites[name]()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"# FAILED suites: {failures}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Table 3 — TTFT speedups from communication compression.
+
+The paper measures wall-clock TTFT on 8xL4 / 4xA100 (Llama-2 models, FP4
+E2M1 block-32 E8M0). This container is CPU-only, so we reproduce the table
+with the calibrated analytic model (serving/ttft.py): hardware constants are
+public specs, mfu/link_bw calibrated on the paper's UNCOMPRESSED rows only;
+the compressed rows and speedups are then predictions compared against the
+paper's measurements. A TPU v5e 16-way row extends the table to our target.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.formats import PAPER_TABLE3_SPEC
+from repro.serving.ttft import HARDWARE, ttft_breakdown
+
+from benchmarks.common import emit
+
+# (model, hw, tp, batch, seq, paper_uncompressed_s, paper_compressed_s)
+PAPER_ROWS = [
+    ("llama2-70b", "L4", 8, 2, 64, 0.58, 0.32),
+    ("llama2-70b", "L4", 8, 2, 128, 1.07, 0.52),
+    ("llama2-70b", "A100", 4, 2, 128, 0.09, 0.15),
+    ("llama2-70b", "A100", 4, 2, 256, 0.13, 0.19),
+    ("llama2-13b", "L4", 4, 8, 128, 0.67, 0.33),
+    ("llama2-13b", "L4", 4, 8, 256, 1.37, 0.70),
+    ("llama2-7b", "L4", 2, 16, 128, 0.39, 0.45),
+    ("llama2-7b", "L4", 2, 16, 256, 0.79, 0.77),
+]
+
+
+def main():
+    print("# Table 3: TTFT analytic reproduction (s) vs paper measurements")
+    spec = PAPER_TABLE3_SPEC
+    errs = []
+    for model, hw_name, tp, b, s, p_un, p_c in PAPER_ROWS:
+        cfg = get_config(model)
+        hw = HARDWARE[hw_name]
+        un = ttft_breakdown(cfg, hw, tp, b, s)["total"]
+        co = ttft_breakdown(cfg, hw, tp, b, s, spec)["total"]
+        pred_speedup = un / co
+        paper_speedup = p_un / p_c
+        errs.append(abs(pred_speedup - paper_speedup) / paper_speedup)
+        emit(f"table3/{model}/{hw_name}x{tp}/{b}x{s}", 0.0,
+             f"pred_un={un:.3f}s;pred_c={co:.3f}s;pred_speedup={pred_speedup:.2f};"
+             f"paper_un={p_un};paper_c={p_c};paper_speedup={paper_speedup:.2f}")
+    emit("table3/mean_speedup_error", 0.0,
+         f"{100*sum(errs)/len(errs):.1f}%_mean_abs_rel_err")
+
+    # directional claims
+    l4_70b = [r for r in PAPER_ROWS if r[1] == "L4" and r[0] == "llama2-70b"]
+    emit("table3/claim_slow_link_wins", 0.0, "holds=True" if all(
+        ttft_breakdown(get_config(m), HARDWARE[h], t, b, s)["total"]
+        > ttft_breakdown(get_config(m), HARDWARE[h], t, b, s, spec)["total"]
+        for m, h, t, b, s, _, _ in l4_70b) else "holds=False")
+    a100 = [r for r in PAPER_ROWS if r[1] == "A100"]
+    emit("table3/claim_fast_link_loses", 0.0, "holds=True" if all(
+        ttft_breakdown(get_config(m), HARDWARE[h], t, b, s)["total"]
+        < ttft_breakdown(get_config(m), HARDWARE[h], t, b, s, spec)["total"]
+        for m, h, t, b, s, _, _ in a100) else "holds=False")
+
+    # target platform extension: TPU v5e, TP=16. Here the honest
+    # uncompressed baseline is XLA's ring all-reduce, against which the
+    # paper's gather scheme LOSES at N=16 — our two-phase compressed
+    # reduce-scatter+all-gather is the variant that wins (EXPERIMENTS §Perf).
+    for model, b, s in [("llama2-70b", 32, 2048), ("qwen3-32b", 32, 32768)]:
+        cfg = get_config(model)
+        hw = HARDWARE["TPUv5e"]
+        ring = ttft_breakdown(cfg, hw, 16, b, s, scheme="ring")["total"]
+        gath = ttft_breakdown(cfg, hw, 16, b, s, spec, scheme="gather")["total"]
+        two = ttft_breakdown(cfg, hw, 16, b, s, spec, scheme="two_phase")["total"]
+        emit(f"table3/tpu_v5e/{model}/{b}x{s}", 0.0,
+             f"ring_bf16={ring:.3f}s;mx_gather={gath:.3f}s;"
+             f"mx_two_phase={two:.3f}s;paper_vs_ring={ring/gath:.2f}x;"
+             f"ours_vs_ring={ring/two:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

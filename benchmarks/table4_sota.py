@@ -1,0 +1,76 @@
+"""Table 4 — SoTA comparison vs Bian et al. 2024's fastest non-learned
+compressors: channel-wise INT4 and TopK-3x. Quality on the probe LM +
+synthetic outlier tensors; TTFT via the analytic model (wire bits differ)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import (
+    channelwise_int_fake_quantize, channelwise_int_wire_bits,
+    topk_fake_compress, topk_wire_bits,
+)
+from repro.core.formats import MXSpec, PAPER_TABLE3_SPEC
+from repro.core.mx import fake_quantize
+
+from benchmarks.common import emit, outlier_activations, time_us
+
+
+def _rel(a, b):
+    return float(jnp.linalg.norm(a - b) / jnp.linalg.norm(b))
+
+
+def main():
+    print("# Table 4: MX4 vs channel-wise INT4 vs TopK-3x (Bian et al.)")
+    x = outlier_activations(seed=3)
+    spec = PAPER_TABLE3_SPEC
+
+    mx_err = _rel(fake_quantize(x, spec), x)
+    us_mx = time_us(lambda: fake_quantize(x, spec), iters=10)
+    int_err = _rel(channelwise_int_fake_quantize(x, 4), x)
+    us_int = time_us(lambda: channelwise_int_fake_quantize(x, 4), iters=10)
+    topk_err = _rel(topk_fake_compress(x, 3.0), x)
+    us_topk = time_us(lambda: topk_fake_compress(x, 3.0), iters=10)
+
+    emit("table4/mx4_e2m1", us_mx,
+         f"rel_err={mx_err:.4f};wire_bits={spec.effective_bits:.2f}")
+    emit("table4/channelwise_int4", us_int,
+         f"rel_err={int_err:.4f};wire_bits="
+         f"{channelwise_int_wire_bits(256, 2048, 4):.2f}")
+    emit("table4/topk_3x", us_topk,
+         f"rel_err={topk_err:.4f};wire_bits={topk_wire_bits(3.0):.2f}")
+
+    # tensor-level note: column-structured synthetic outliers flatter
+    # channel-wise INT (its scale axis matches); the decisive metric is the
+    # model-level perplexity below, where fine-grained MX wins (paper Table 4)
+    emit("table4/topk_worst_at_tensor_level", 0.0,
+         f"holds={topk_err > max(mx_err, int_err)}")
+
+    # probe-LM perplexity comparison (the real quality metric)
+    from benchmarks.common import eval_ce, _baseline_ce
+    from repro.core.policy import CompressionPolicy
+    import repro.core.mx as mxmod
+
+    ce0 = _baseline_ce(4)
+    ce_mx = eval_ce(CompressionPolicy(spec=spec, min_tokens=0), 4)
+    emit("table4/ppl_incr_mx4", 0.0, f"{100*np.expm1(ce_mx-ce0):.2f}%")
+
+    # channel-wise INT4 spliced in via monkeypatched fake_quantize
+    orig = mxmod.fake_quantize
+    try:
+        mxmod.fake_quantize = lambda t, s: channelwise_int_fake_quantize(t, 4)
+        import repro.core.tp as tpmod
+        ce_int = eval_ce(CompressionPolicy(
+            spec=dataclasses.replace(spec), min_tokens=0), 4)
+    finally:
+        mxmod.fake_quantize = orig
+    emit("table4/ppl_incr_channelwise_int4", 0.0,
+         f"{100*np.expm1(ce_int-ce0):.2f}%")
+    emit("table4/claim_ppl_mx_beats_int", 0.0,
+         f"holds={ce_mx <= ce_int + 1e-4}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Table 5 (appendix) — ablation over scale bits, value dtype, block size,
+and TP degree ("parallelism"), on the probe LM at TP=4 unless varied."""
+from __future__ import annotations
+
+from repro.core.formats import MXSpec
+
+from benchmarks.common import emit, ppl_increase
+
+
+def main():
+    print("# Table 5: quantization hyper-parameter ablation (probe-LM)")
+    # scale bits (paper: E5M0 sufficient, E4M0 degrades)
+    for sb in ["e4m0", "e5m0", "e6m0", "e8m0"]:
+        d = ppl_increase(MXSpec.make("fp4_e2m1", 32, sb), tp=4)
+        emit(f"table5/scale_{sb}", 0.0, f"ppl_incr={d*100:.2f}%")
+
+    # value dtypes incl. the E1Mm == INT equivalences
+    for vd in ["fp3_e1m1", "fp4_e1m2", "fp4_e2m1", "fp5_e1m3", "fp5_e2m2",
+               "fp5_e3m1", "int3", "int4", "int5"]:
+        d = ppl_increase(MXSpec.make(vd, 32, "e8m0"), tp=4)
+        emit(f"table5/value_{vd}", 0.0, f"ppl_incr={d*100:.2f}%")
+
+    # block size
+    for b in [8, 16, 32]:
+        d = ppl_increase(MXSpec.make("fp4_e2m1", b, "e8m0"), tp=4)
+        emit(f"table5/block_{b}", 0.0, f"ppl_incr={d*100:.2f}%")
+
+    # parallelism (paper: degradation roughly flat / slightly improving in N —
+    # each shard's partials are smaller-magnitude, quantized independently)
+    for tp in [2, 4, 8, 16]:
+        d = ppl_increase(MXSpec.make("fp4_e2m1", 32, "e8m0"), tp=tp)
+        emit(f"table5/parallelism_{tp}", 0.0, f"ppl_incr={d*100:.2f}%")
+
+    # variants: paper gather vs beyond-paper two-phase (double quantization)
+    for variant in ["gather", "two_phase"]:
+        d = ppl_increase(MXSpec.make("fp4_e2m1", 32, "e8m0"), tp=4,
+                         variant=variant)
+        emit(f"table5/variant_{variant}", 0.0, f"ppl_incr={d*100:.2f}%")
+
+
+if __name__ == "__main__":
+    main()

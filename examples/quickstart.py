@@ -1,0 +1,50 @@
+"""60-second tour of the public API.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    MXSpec, CompressionPolicy, TPContext, quantize, dequantize,
+    quantization_error, row_linear,
+)
+from repro.models import build
+
+# ---------------------------------------------------------------- 1. the codec
+spec = MXSpec.make("fp4_e2m1", 32, "e8m0")   # paper's Table-3 scheme
+print(f"scheme {spec.name}: {spec.effective_bits} effective bits, "
+      f"{spec.compression_ratio():.2f}x vs bf16")
+
+x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 256)), jnp.float32)
+comp = quantize(x, spec)                      # wire format: packed codes+scales
+print("wire bytes:", comp.payload.nbytes + comp.scales.nbytes,
+      "vs dense", x.nbytes)
+err = quantization_error(x, spec)
+print(f"SQNR {float(err['sqnr_db']):.1f} dB, rel L2 {float(err['rel_l2']):.3f}")
+
+# ------------------------------------------- 2. a compressed TP row reduction
+# On 1 CPU device there is no mesh; simulate_tp splices the codec into the
+# reduction numerically, exactly as a TP=4 deployment would see it.
+policy = CompressionPolicy(spec=spec, min_tokens=0)
+ctx = TPContext(mesh=None, policy=policy, simulate_tp=4)
+w = jnp.asarray(np.random.default_rng(1).normal(size=(256, 128)) / 16,
+                jnp.float32)
+y_compressed = row_linear(ctx, x, w)
+y_exact = row_linear(TPContext(mesh=None), x, w)
+rel = float(jnp.linalg.norm(y_compressed - y_exact) / jnp.linalg.norm(y_exact))
+print(f"TP=4 compressed reduction rel err: {rel:.3f}")
+
+# --------------------------------------------------------------- 3. a model
+model = build("qwen3-32b", reduced=True)      # 2-layer smoke variant
+params = model.init_params(jax.random.PRNGKey(0))
+tok = jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0,
+                         model.cfg.vocab_size)
+loss, metrics = model.loss(ctx, params,
+                           {"tokens": tok[:, :-1], "targets": tok[:, 1:]})
+print(f"qwen3 (reduced) train loss with compressed TP: {float(loss):.3f}")
+
+cache = model.init_cache(2, 32)
+logits, cache = model.prefill(ctx, params, {"tokens": tok[:, :-1]}, cache)
+print("prefill logits:", logits.shape, "cache pos:", int(cache["pos"]))

@@ -1,0 +1,40 @@
+"""§5.1 end-to-end: run the paper's compression-scheme selection procedure
+against the probe LM and print the Table-2-style result.
+
+  PYTHONPATH=src python examples/scheme_search.py [--threshold 0.03]
+"""
+import argparse
+
+from repro.core import search_scheme, spec_grid
+
+from benchmarks.common import ppl_increase
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threshold", type=float, default=0.03)
+    ap.add_argument("--tp", type=int, default=4)
+    args = ap.parse_args()
+
+    candidates = list(spec_grid(("fp5_e2m2", "fp4_e2m1", "fp3_e1m1"),
+                                (8, 16, 32), ("e8m0",)))
+    print(f"searching {len(candidates)} schemes, "
+          f"threshold {args.threshold:.0%} ppl increase, TP={args.tp}")
+
+    def eval_fn(spec):
+        d = ppl_increase(spec, tp=args.tp)
+        print(f"  {spec.name:24s} eff_bits={spec.effective_bits:5.2f} "
+              f"ppl+{d*100:6.2f}% {'PASS' if d < args.threshold else 'fail'}")
+        return d
+
+    res = search_scheme(eval_fn, candidates, max_degradation=args.threshold)
+    if res.best is None:
+        print("no scheme under threshold")
+        return
+    print(f"\nCHOSEN: {res.best.name} — {res.best.effective_bits:.2f} effective "
+          f"bits ({res.best.compression_ratio():.2f}x compression), "
+          f"+{res.best_degradation*100:.2f}% perplexity")
+
+
+if __name__ == "__main__":
+    main()

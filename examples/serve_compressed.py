@@ -1,0 +1,68 @@
+"""Serve a small trained model with batched requests, comparing TTFT and
+output quality with and without compressed TP communication.
+
+  PYTHONPATH=src python examples/serve_compressed.py
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/serve_compressed.py --mesh
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.core.formats import MXSpec
+from repro.core.policy import CompressionPolicy, NO_COMPRESSION
+from repro.data import ByteTokenizer, Batches, corpus_tokens
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import make_context
+from repro.models.model import Model
+from repro.serving import Engine, Request
+from repro.training import AdamWConfig, init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", action="store_true",
+                    help="use a (data, model) mesh over host devices")
+    ap.add_argument("--steps", type=int, default=150)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        reduced_config(get_config("internlm2-1.8b"), n_layers=3, d_model=192),
+        vocab_size=258, d_ff=768)
+    model = Model(cfg)
+
+    # quick train so generations aren't pure noise
+    ctx0 = make_context(None, None)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, ctx0, AdamWConfig(
+        lr=3e-3, warmup_steps=10, total_steps=args.steps)))
+    batches = Batches(corpus_tokens(500_000), 8, 128)
+    for i in range(args.steps):
+        state, m = step(state, batches.next())
+    print(f"trained {args.steps} steps, loss {float(m['loss']):.3f}")
+
+    mesh = make_host_mesh() if args.mesh and len(jax.devices()) > 1 else None
+    tok = ByteTokenizer()
+    prompt = tok.encode("def main():\n    ")
+
+    for name, policy in [
+        ("bf16", NO_COMPRESSION),
+        ("mx4-gather", CompressionPolicy(spec=MXSpec.make("fp4_e2m1", 32))),
+        ("mx4-two-phase", CompressionPolicy(spec=MXSpec.make("fp4_e2m1", 32),
+                                            variant="two_phase")),
+    ]:
+        ctx = make_context(mesh, None, policy=policy)
+        engine = Engine(model, state["params"], ctx, batch_size=4, max_len=192)
+        reqs = [Request(prompt=prompt, max_new_tokens=48) for _ in range(4)]
+        out = engine.run(reqs)
+        text = tok.decode(out[0].output)
+        stats = engine.measure_ttft(len(prompt), iters=4)
+        print(f"\n--- {name}: TTFT {stats['median_s']*1e3:.1f} ms")
+        print(f"completion: {text!r}")
+
+
+if __name__ == "__main__":
+    main()

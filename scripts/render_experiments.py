@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Render the §Dry-run / §Roofline tables of EXPERIMENTS.md from the
+experiments/dryrun/*.json records. Writes experiments/roofline_table.md
+(included verbatim into EXPERIMENTS.md)."""
+import json
+import pathlib
+from collections import defaultdict
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DRY = ROOT / "experiments" / "dryrun"
+
+ARCH_ORDER = [
+    "pixtral-12b", "whisper-medium", "jamba-v0.1-52b", "internlm2-1.8b",
+    "qwen2-7b", "gemma3-4b", "xlstm-125m", "llama4-maverick-400b-a17b",
+    "mixtral-8x22b", "qwen3-32b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def main():
+    recs = {}
+    for p in DRY.glob("*.json"):
+        r = json.loads(p.read_text())
+        recs[(r["arch"], r["shape"], r["mesh"], r["compressed"])] = r
+
+    lines = []
+    lines.append("### Single-pod (16x16) roofline — all (arch x shape), "
+                 "bf16 vs MX-gather (paper-faithful)\n")
+    lines.append("| arch | shape | pol | compute | memory | collective | "
+                 "dominant | mem/chip | useful FLOPs |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for comp in (False, True):
+                r = recs.get((arch, shape, "16x16", comp))
+                if r is None:
+                    continue
+                lines.append(
+                    f"| {arch} | {shape} | {'MX' if comp else 'bf16'} "
+                    f"| {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+                    f"| {fmt_s(r['collective_s'])} "
+                    f"| {r['dominant'].replace('_s','')} "
+                    f"| {r['memory']['peak_est_bytes']/2**30:.1f}GiB "
+                    f"| {r.get('useful_flops_ratio', 0):.2f} |")
+
+    lines.append("\n### Multi-pod (2x16x16) — lower+compile proof (MX)\n")
+    lines.append("| arch | shape | compile | collective | dominant |")
+    lines.append("|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, "2x16x16", True))
+            if r is None:
+                continue
+            lines.append(f"| {arch} | {shape} | {r['compile_s']:.0f}s "
+                         f"| {fmt_s(r['collective_s'])} | "
+                         f"{r['dominant'].replace('_s','')} |")
+
+    n_single = sum(1 for k in recs if k[2] == "16x16")
+    n_multi = sum(1 for k in recs if k[2] == "2x16x16")
+    lines.append(f"\nRecords: {n_single} single-pod, {n_multi} multi-pod "
+                 f"(experiments/dryrun/*.json).")
+    out = ROOT / "experiments" / "roofline_table.md"
+    out.write_text("\n".join(lines) + "\n")
+    print(f"wrote {out} ({n_single} single-pod, {n_multi} multi-pod records)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Crash-tolerant dry-run sweep: one subprocess per (arch, shape, mesh,
+policy) so an XLA CHECK-abort can't kill the whole run. Skips combos whose
+record already exists. Usage:
+
+  python scripts/sweep.py [--multi-pod] [--redo]
+"""
+import argparse
+import pathlib
+import subprocess
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+OUT = ROOT / "experiments" / "dryrun"
+
+ARCHS = [
+    "pixtral-12b", "whisper-medium", "jamba-v0.1-52b", "internlm2-1.8b",
+    "qwen2-7b", "gemma3-4b", "xlstm-125m", "llama4-maverick-400b-a17b",
+    "mixtral-8x22b", "qwen3-32b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+LONG_OK = {"jamba-v0.1-52b", "xlstm-125m", "gemma3-4b", "mixtral-8x22b"}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--redo", action="store_true")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+
+    mesh = "2x16x16" if args.multi_pod else "16x16"
+    policies = ["mx"] if args.multi_pod else ["bf16", "mx"]
+    results = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            if shape == "long_500k" and arch not in LONG_OK:
+                results.append((arch, shape, "SKIP"))
+                continue
+            for pol in policies:
+                rec = OUT / f"{arch}__{shape}__{mesh}__{pol}.json"
+                if rec.exists() and not args.redo:
+                    results.append((arch, shape, f"cached-{pol}"))
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape,
+                       "--compressed" if pol == "mx" else "--uncompressed"]
+                if args.multi_pod:
+                    cmd.append("--multi-pod")
+                t0 = time.time()
+                import os
+
+                env = dict(os.environ)
+                env["PYTHONPATH"] = str(ROOT / "src")
+                proc = subprocess.run(
+                    cmd, cwd=ROOT, capture_output=True, text=True,
+                    timeout=args.timeout, env=env,
+                )
+                ok = proc.returncode == 0 and rec.exists()
+                status = "OK" if ok else "FAIL"
+                results.append((arch, shape, f"{status}-{pol}"))
+                print(f"{status} {arch} {shape} {mesh} {pol} "
+                      f"({time.time()-t0:.0f}s)", flush=True)
+                if not ok:
+                    tail = (proc.stdout + proc.stderr)[-800:]
+                    print(f"  tail: {tail}", flush=True)
+    fails = [r for r in results if r[2].startswith("FAIL")]
+    print(f"\n{len(fails)} failures / {len(results)} combos")
+    for f in fails:
+        print("  FAIL:", f)
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,10 @@
+"""Target hardware constants (TPU v5e) for the roofline analysis."""
+from __future__ import annotations
+
+PEAK_FLOPS_BF16 = 197e12     # per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+CHIPS_PER_POD = 256
+VMEM_BYTES = 128 * 1024 * 1024
+HBM_BYTES = 16 * 1024**3

@@ -1,0 +1,47 @@
+"""Architecture registry: the 10 assigned configs + the paper's own Llama-2
+profiling configs. ``get_config(arch_id)`` / ``ARCHS`` are the public API."""
+from __future__ import annotations
+
+from repro.configs.base import (
+    INPUT_SHAPES, InputShape, LayerSpec, ModelConfig, reduced_config,
+)
+from repro.configs.pixtral_12b import CONFIG as pixtral_12b
+from repro.configs.whisper_medium import CONFIG as whisper_medium
+from repro.configs.jamba_v01_52b import CONFIG as jamba_v01_52b
+from repro.configs.internlm2_1_8b import CONFIG as internlm2_1_8b
+from repro.configs.qwen2_7b import CONFIG as qwen2_7b
+from repro.configs.gemma3_4b import CONFIG as gemma3_4b
+from repro.configs.xlstm_125m import CONFIG as xlstm_125m
+from repro.configs.llama4_maverick import CONFIG as llama4_maverick
+from repro.configs.mixtral_8x22b import CONFIG as mixtral_8x22b
+from repro.configs.qwen3_32b import CONFIG as qwen3_32b
+from repro.configs.llama2 import LLAMA2_7B, LLAMA2_13B, LLAMA2_70B
+
+ARCHS = {
+    "pixtral-12b": pixtral_12b,
+    "whisper-medium": whisper_medium,
+    "jamba-v0.1-52b": jamba_v01_52b,
+    "internlm2-1.8b": internlm2_1_8b,
+    "qwen2-7b": qwen2_7b,
+    "gemma3-4b": gemma3_4b,
+    "xlstm-125m": xlstm_125m,
+    "llama4-maverick-400b-a17b": llama4_maverick,
+    "mixtral-8x22b": mixtral_8x22b,
+    "qwen3-32b": qwen3_32b,
+    # the paper's own profiling models (Table 3)
+    "llama2-7b": LLAMA2_7B,
+    "llama2-13b": LLAMA2_13B,
+    "llama2-70b": LLAMA2_70B,
+}
+
+ASSIGNED = [k for k in ARCHS if not k.startswith("llama2")]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return ARCHS[arch_id]
+
+
+__all__ = [
+    "ARCHS", "ASSIGNED", "get_config", "ModelConfig", "LayerSpec",
+    "InputShape", "INPUT_SHAPES", "reduced_config",
+]

@@ -1,0 +1,222 @@
+"""Model / input-shape configuration system.
+
+One ``ModelConfig`` describes any architecture in the assigned pool: dense
+GQA transformers, MoE, SSM (Mamba), xLSTM, hybrid interleaves, encoder-
+decoder (audio), and VLM (early-fusion) — as a per-layer schedule of block
+kinds plus global dims. Every config file in this package cites its source.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+__all__ = ["LayerSpec", "ModelConfig", "InputShape", "INPUT_SHAPES", "reduced_config"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One block in the schedule."""
+
+    kind: str = "attn"           # "attn" | "mamba" | "slstm" | "mlstm"
+    moe: bool = False            # routed-experts MLP instead of dense MLP
+    window: Optional[int] = None  # sliding-window width (None = global attn)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    layers: Tuple[LayerSpec, ...] = ()
+
+    # attention details
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+    # SSM (Mamba)
+    ssm_d_state: int = 16
+    ssm_d_conv: int = 4
+    ssm_expand: int = 2
+    ssm_dt_rank: int = 0         # 0 => ceil(d_model / 16)
+
+    # xLSTM
+    xlstm_proj_factor: float = 2.0
+    xlstm_conv: int = 4
+
+    # encoder-decoder (audio)
+    encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1500      # whisper frame count after conv frontend
+
+    # multimodal early fusion (vlm)
+    frontend: Optional[str] = None  # None | "vision" | "audio"
+    n_patches: int = 256            # vision tokens prepended at prefill
+
+    # misc
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    activation: str = "silu"     # silu | gelu
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    source: str = ""             # citation
+
+    def __post_init__(self):
+        if not self.layers:
+            object.__setattr__(
+                self, "layers", tuple(LayerSpec() for _ in range(self.n_layers))
+            )
+        assert len(self.layers) == self.n_layers
+
+    @property
+    def dt_rank(self) -> int:
+        return self.ssm_dt_rank or -(-self.d_model // 16)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if every layer is SSM/recurrent or windowed attention, OR the
+        schedule is dominated by such layers with cache-shardable globals —
+        the gate for the long_500k shape (see DESIGN.md)."""
+        kinds = [l.kind for l in self.layers]
+        if all(k in ("mamba", "slstm", "mlstm") for k in kinds):
+            return True
+        if any(k in ("mamba", "slstm", "mlstm") for k in kinds):
+            return True  # hybrid: attn layers cache-shard over data
+        return all(l.window is not None for l in self.layers if l.kind == "attn") or any(
+            l.window is not None for l in self.layers
+        )
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, ff = self.d_model, self.d_ff
+        n = self.vocab_size * d  # embedding
+        if not self.tie_embeddings:
+            n += self.vocab_size * d
+        for spec in self.layers:
+            if spec.kind == "attn":
+                n += d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+                if self.qkv_bias:
+                    n += self.q_dim + 2 * self.kv_dim
+            elif spec.kind == "mamba":
+                di = self.ssm_d_inner
+                n += d * 2 * di + self.ssm_d_conv * di
+                n += di * (self.dt_rank + 2 * self.ssm_d_state)
+                n += self.dt_rank * di + di * self.ssm_d_state + di
+                n += di * d
+            elif spec.kind in ("mlstm", "slstm"):
+                di = int(self.xlstm_proj_factor * d)
+                if spec.kind == "mlstm":
+                    n += d * 2 * di + 3 * di * di + 2 * di + di * d
+                else:
+                    nh = self.n_heads
+                    dh = d // nh
+                    n += 4 * (d * d + nh * dh * dh) + int(4 / 3 * d) * d * 2
+            if spec.moe:
+                n += d * self.n_experts  # router
+                n += self.n_experts * 3 * d * ff
+                n += self.n_shared_experts * 3 * d * ff
+            elif spec.kind == "attn" and ff > 0:
+                gate = 3 if self.activation == "silu" else 2
+                n += gate * d * ff
+            n += 2 * d  # norms
+        if self.encoder_decoder:
+            for _ in range(self.n_encoder_layers):
+                n += 4 * d * self.q_dim + 2 * d * ff + 2 * d  # enc self-attn + mlp
+                n += 4 * d * self.q_dim  # dec cross-attn (counted here)
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only top_k + shared experts)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        inactive = 0
+        for spec in self.layers:
+            if spec.moe:
+                inactive += (self.n_experts - self.top_k) * 3 * d * ff
+        return self.param_count() - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def reduced_config(cfg: ModelConfig, *, n_layers: int = 2, d_model: int = 256,
+                   max_experts: int = 4, vocab: int = 512) -> ModelConfig:
+    """Smoke-test variant of the same family: <=2 layers, small dims, <=4
+    experts — keeps the layer-schedule *pattern* (first n_layers entries,
+    but guaranteeing at least one of each kind present in the original)."""
+    kinds_needed = []
+    seen = set()
+    for spec in cfg.layers:
+        key = (spec.kind, spec.moe, spec.window is not None)
+        if key not in seen:
+            seen.add(key)
+            kinds_needed.append(spec)
+    layers = tuple(kinds_needed[:n_layers])
+    while len(layers) < n_layers:
+        layers = layers + (cfg.layers[len(layers) % cfg.n_layers],)
+    n_heads = min(cfg.n_heads, 4)
+    n_kv = max(1, min(cfg.n_kv_heads, n_heads))
+    head_dim = 32
+    return dataclasses.replace(
+        cfg,
+        n_layers=len(layers),
+        layers=tuple(
+            dataclasses.replace(l, window=min(l.window, 32) if l.window else None)
+            for l in layers
+        ),
+        d_model=min(d_model, cfg.d_model),
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=head_dim,
+        d_ff=min(512, cfg.d_ff) if cfg.d_ff else 0,
+        vocab_size=vocab,
+        n_experts=min(cfg.n_experts, max_experts) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        ssm_d_state=8,
+        n_encoder_layers=min(cfg.n_encoder_layers, 2),
+        encoder_seq=min(cfg.encoder_seq, 64),
+        n_patches=min(cfg.n_patches, 16),
+        ssm_dt_rank=8 if cfg.family in ("ssm", "hybrid") else 0,
+    )

@@ -1,0 +1,29 @@
+"""whisper-medium [audio] — encoder-decoder, conv/mel frontend stubbed
+(precomputed frame embeddings). [arXiv:2212.04356]
+
+24 enc + 24 dec layers, d_model 1024, 16 heads (kv=16 => MHA), d_ff 4096,
+vocab 51865. GELU MLP, layernorm-family model (we use rmsnorm + RoPE
+uniformly, see DESIGN.md). Encoder-decoder: decode shapes lower the decoder
+self-attn cache at the requested lengths; long_500k skipped (full attention,
+and the model's decoder regime is <=448 tokens).
+"""
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51865,
+    layers=tuple(LayerSpec(kind="attn") for _ in range(24)),
+    activation="gelu",
+    encoder_decoder=True,
+    n_encoder_layers=24,
+    encoder_seq=1500,
+    frontend="audio",
+    source="arXiv:2212.04356",
+)

@@ -1,0 +1,43 @@
+"""Core library: the paper's contribution — MX-compressed TP collectives."""
+from repro.core.formats import ELEMENT_FORMATS, MXSpec, SCALE_FORMATS, spec_grid
+from repro.core.mx import (
+    MXCompressed,
+    dequantize,
+    fake_quantize,
+    quantization_error,
+    quantize,
+)
+from repro.core.policy import CompressionPolicy, NO_COMPRESSION, PAPER_DEFAULT
+from repro.core.collectives import (
+    compressed_all_gather,
+    compressed_all_to_all,
+    compressed_psum,
+    psum_maybe_compressed,
+)
+from repro.core.tp import TPContext, column_linear, fused_mlp, row_linear
+from repro.core.search import SearchResult, search_scheme
+
+__all__ = [
+    "ELEMENT_FORMATS",
+    "SCALE_FORMATS",
+    "MXSpec",
+    "spec_grid",
+    "MXCompressed",
+    "quantize",
+    "dequantize",
+    "fake_quantize",
+    "quantization_error",
+    "CompressionPolicy",
+    "NO_COMPRESSION",
+    "PAPER_DEFAULT",
+    "compressed_psum",
+    "compressed_all_gather",
+    "compressed_all_to_all",
+    "psum_maybe_compressed",
+    "TPContext",
+    "row_linear",
+    "column_linear",
+    "fused_mlp",
+    "SearchResult",
+    "search_scheme",
+]

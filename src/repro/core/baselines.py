@@ -1,0 +1,58 @@
+"""SoTA comparison baselines from Bian et al. 2024 (paper Table 4).
+
+Two fastest non-learned compressors the paper compares against:
+  * channel-wise INT quantization — one fp scale per channel (last dim),
+    symmetric int codes; cheap but coarse (outliers poison whole channels).
+  * TopK compression — keep the K largest magnitudes, zero the rest; wire
+    format is (values, indices).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = [
+    "channelwise_int_fake_quantize",
+    "channelwise_int_wire_bits",
+    "topk_fake_compress",
+    "topk_wire_bits",
+]
+
+
+def channelwise_int_fake_quantize(x: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
+    """Per-channel symmetric int quantize+dequantize.
+
+    The channel axis is the last dim (matching row-parallel outputs where the
+    hidden dim is the channel axis and the scale is shared over all tokens).
+    """
+    imax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(x), axis=tuple(range(x.ndim - 1)), keepdims=True)
+    scale = jnp.where(amax > 0, amax / imax, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -imax, imax)
+    return (q * scale).astype(x.dtype)
+
+
+def channelwise_int_wire_bits(n_tokens: int, n_channels: int, bits: int = 4,
+                              scale_bits: int = 16) -> float:
+    """Effective bits per value: int codes + one fp scale per channel."""
+    total = n_tokens * n_channels * bits + n_channels * scale_bits
+    return total / (n_tokens * n_channels)
+
+
+def topk_fake_compress(x: jnp.ndarray, ratio: float = 3.0) -> jnp.ndarray:
+    """Keep the top n/ratio/2 magnitudes (value+index pair per kept element
+    costs ~2 slots on the wire, so a 3x wire compression keeps n/6)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    k = max(1, int(n / (2.0 * ratio)))
+    thresh = jnp.sort(jnp.abs(flat))[n - k]
+    mask = jnp.abs(x) >= thresh
+    return jnp.where(mask, x, 0).astype(x.dtype)
+
+
+def topk_wire_bits(ratio: float = 3.0, value_bits: int = 16,
+                   index_bits: int = 16) -> float:
+    """Effective bits per value for TopK at a given wire compression ratio."""
+    kept_fraction = 1.0 / (2.0 * ratio)
+    return kept_fraction * (value_bits + index_bits)

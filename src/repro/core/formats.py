@@ -1,0 +1,219 @@
+"""MX (microscaling) element and scale formats, per the OCP MX spec and the
+paper's extensions.
+
+An MX-compressed tensor is a sequence of blocks of ``block_size`` consecutive
+values. Each block stores one shared power-of-two scale (``EkM0``) plus
+``block_size`` low-bit element codes (minifloat ``EeMm`` or signed int).
+
+Element formats are defined by their exact code tables (<= 2**5 codes), which
+makes quantization semantics auditable and lets tests assert spec-level facts
+(e.g. FP4 E2M1 max == 6.0, E1Mm grid == INT(m+2) grid).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import numpy as np
+
+__all__ = [
+    "ElementFormat",
+    "ScaleFormat",
+    "MXSpec",
+    "ELEMENT_FORMATS",
+    "SCALE_FORMATS",
+    "PAPER_VALUE_DTYPES",
+    "PAPER_BLOCK_SIZES",
+    "PAPER_SCALE_DTYPES",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElementFormat:
+    """A low-bit element format: minifloat ``EeMm`` (sign + e exp + m mantissa
+    bits) or signed integer ``INTn``.
+
+    Minifloat semantics (OCP MX): no inf/nan encodings, subnormals supported,
+    exponent bias ``2**(e-1) - 1`` for ``e >= 2`` and ``0`` for ``e == 1``
+    (which makes E1Mm coincide with the INT(m+2) grid, as the paper's Table 5
+    observes empirically).
+    """
+
+    name: str
+    kind: str  # "fp" | "int"
+    bits: int  # total bits incl. sign
+    exp_bits: int = 0
+    man_bits: int = 0
+
+    @functools.cached_property
+    def code_values(self) -> np.ndarray:
+        """All representable values, ascending, deduplicated, float64."""
+        if self.kind == "int":
+            # symmetric signed int: codes in [-(2**(b-1)-1), 2**(b-1)-1],
+            # with implied fractional scaling so max magnitude ~ emax grid.
+            imax = 2 ** (self.bits - 1) - 1
+            vals = np.arange(-imax, imax + 1, dtype=np.float64)
+        else:
+            e, m = self.exp_bits, self.man_bits
+            bias = (2 ** (e - 1) - 1) if e >= 2 else 0
+            vals = []
+            for r in range(2**e):
+                for f in range(2**m):
+                    if r == 0:  # subnormal
+                        mag = 2.0 ** (1 - bias) * (f / 2**m)
+                    else:
+                        mag = 2.0 ** (r - bias) * (1.0 + f / 2**m)
+                    vals.extend([mag, -mag])
+            vals = np.array(sorted(set(vals)), dtype=np.float64)
+        return vals
+
+    @functools.cached_property
+    def max_value(self) -> float:
+        return float(self.code_values[-1])
+
+    @functools.cached_property
+    def emax(self) -> int:
+        """floor(log2(max representable)) — used for shared-exp selection."""
+        return int(np.floor(np.log2(self.max_value)))
+
+    @property
+    def num_codes(self) -> int:
+        return len(self.code_values)
+
+    @functools.cached_property
+    def midpoints(self) -> np.ndarray:
+        """Midpoints between adjacent code values (round-to-nearest bins)."""
+        v = self.code_values
+        return (v[:-1] + v[1:]) / 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleFormat:
+    """Power-of-two shared scale ``EkM0``: value = 2**(raw - bias).
+
+    E8M0 per OCP spec: raw in [0, 254], bias 127 (255 = NaN, unused here).
+    Smaller k: raw in [0, 2**k - 1], bias 2**(k-1) - 1.
+    """
+
+    name: str
+    exp_bits: int
+
+    @property
+    def bias(self) -> int:
+        return 2 ** (self.exp_bits - 1) - 1
+
+    @property
+    def min_exp(self) -> int:
+        return -self.bias
+
+    @property
+    def max_exp(self) -> int:
+        top = 2**self.exp_bits - 1 - (1 if self.exp_bits == 8 else 0)
+        return top - self.bias
+
+    @property
+    def bits(self) -> int:
+        return self.exp_bits
+
+
+def _fp(name: str, e: int, m: int) -> ElementFormat:
+    return ElementFormat(name=name, kind="fp", bits=1 + e + m, exp_bits=e, man_bits=m)
+
+
+def _int(name: str, b: int) -> ElementFormat:
+    return ElementFormat(name=name, kind="int", bits=b)
+
+
+ELEMENT_FORMATS = {
+    # paper section 4.1 value dtypes
+    "fp5_e3m1": _fp("fp5_e3m1", 3, 1),
+    "fp5_e2m2": _fp("fp5_e2m2", 2, 2),
+    "fp5_e1m3": _fp("fp5_e1m3", 1, 3),
+    "fp4_e2m1": _fp("fp4_e2m1", 2, 1),
+    "fp4_e1m2": _fp("fp4_e1m2", 1, 2),
+    "fp3_e1m1": _fp("fp3_e1m1", 1, 1),
+    "fp2_e1m0": _fp("fp2_e1m0", 1, 0),
+    "int3": _int("int3", 3),
+    "int4": _int("int4", 4),
+    "int5": _int("int5", 5),
+    # extras (useful baselines)
+    "fp6_e3m2": _fp("fp6_e3m2", 3, 2),
+    "fp8_e4m3": _fp("fp8_e4m3", 4, 3),
+    "int8": _int("int8", 8),
+}
+
+SCALE_FORMATS = {
+    "e8m0": ScaleFormat("e8m0", 8),
+    "e7m0": ScaleFormat("e7m0", 7),
+    "e6m0": ScaleFormat("e6m0", 6),
+    "e5m0": ScaleFormat("e5m0", 5),
+    "e4m0": ScaleFormat("e4m0", 4),
+}
+
+PAPER_VALUE_DTYPES = (
+    "fp5_e3m1", "fp5_e2m2", "fp5_e1m3",
+    "fp4_e2m1", "fp4_e1m2",
+    "fp3_e1m1",
+    "int3", "int4", "int5",
+)
+PAPER_BLOCK_SIZES = (8, 16, 32)
+PAPER_SCALE_DTYPES = ("e8m0", "e7m0", "e6m0", "e5m0", "e4m0")
+
+
+@dataclasses.dataclass(frozen=True)
+class MXSpec:
+    """One microscaling compression scheme = (element fmt, block size, scale fmt)."""
+
+    elem: ElementFormat
+    block_size: int
+    scale: ScaleFormat
+
+    @classmethod
+    def make(cls, value_dtype: str, block_size: int, scale_dtype: str = "e8m0") -> "MXSpec":
+        return cls(
+            elem=ELEMENT_FORMATS[value_dtype],
+            block_size=int(block_size),
+            scale=SCALE_FORMATS[scale_dtype],
+        )
+
+    @property
+    def name(self) -> str:
+        return f"{self.elem.name}_b{self.block_size}_{self.scale.name}"
+
+    @property
+    def effective_bits(self) -> float:
+        """Paper's compression metric: value bits + amortized scale bits."""
+        return self.elem.bits + self.scale.bits / self.block_size
+
+    def compression_ratio(self, baseline_bits: int = 16) -> float:
+        return baseline_bits / self.effective_bits
+
+    def wire_bytes(self, n_values: int) -> int:
+        """Actual on-wire bytes for ``n_values`` values: bit-packed codes
+        (8 codes -> elem.bits bytes) + one byte per block scale. ``n_values``
+        must be a multiple of block_size."""
+        assert n_values % self.block_size == 0
+        n_blocks = n_values // self.block_size
+        code_bytes = (n_values * self.elem.bits + 7) // 8
+        return code_bytes + n_blocks  # scales byte-aligned on the wire
+
+    def wire_bits_per_value(self, n_values: int) -> float:
+        return 8.0 * self.wire_bytes(n_values) / n_values
+
+
+# The configurations the paper converges on (Table 2 uses E5M0-equivalent
+# effective-bit accounting; TTFT profiling in Table 3 uses e8m0 + block 32).
+PAPER_TABLE3_SPEC = MXSpec.make("fp4_e2m1", 32, "e8m0")  # 4.25 effective bits
+
+
+def spec_grid(
+    value_dtypes: Tuple[str, ...] = PAPER_VALUE_DTYPES,
+    block_sizes: Tuple[int, ...] = PAPER_BLOCK_SIZES,
+    scale_dtypes: Tuple[str, ...] = ("e8m0",),
+):
+    """Iterate the hyper-parameter grid of section 4.1."""
+    for v in value_dtypes:
+        for b in block_sizes:
+            for s in scale_dtypes:
+                yield MXSpec.make(v, b, s)

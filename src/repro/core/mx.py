@@ -1,0 +1,154 @@
+"""Block-wise MX quantization / dequantization (pure jnp, oracle-grade).
+
+Semantics (OCP MX spec section 5.1, extended per the paper):
+
+  per block of ``B`` consecutive values along the last axis:
+    shared_exp = clamp(floor(log2(amax)) - emax(elem), scale range)
+    scale      = 2 ** shared_exp
+    code_i     = nearest representable elem value to (v_i / scale)
+    v_i'       = elem_value(code_i) * scale
+
+Values are quantized via the element format's exact code table (formats.py),
+so quantize == round-to-nearest onto the representable grid with saturation.
+
+The compressed wire format is a pair of uint8 arrays:
+  payload: bit-packed code indices (packing.py), B*bits/8 bytes per block
+  scales:  one raw-biased exponent byte per block
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import MXSpec
+from repro.core.packing import pack_codes, unpack_codes
+
+__all__ = [
+    "MXCompressed",
+    "quantize",
+    "dequantize",
+    "quantize_codes",
+    "codes_to_values",
+    "fake_quantize",
+    "quantization_error",
+]
+
+
+class MXCompressed(NamedTuple):
+    """Wire representation of an MX-compressed tensor (static spec kept
+    alongside by the caller; shapes carry the geometry)."""
+
+    payload: jnp.ndarray  # uint8 (..., n_blocks * block * bits // 8)
+    scales: jnp.ndarray   # uint8 (..., n_blocks) raw-biased shared exponents
+
+
+def _blocked(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    assert x.shape[-1] % block == 0, (
+        f"last dim {x.shape[-1]} not divisible by MX block size {block}"
+    )
+    return x.reshape(*x.shape[:-1], x.shape[-1] // block, block)
+
+
+def floor_log2(x: jnp.ndarray) -> jnp.ndarray:
+    """Exact floor(log2(x)) for positive normal float32 via exponent-field
+    bitcast (OCP MX uses the fp exponent directly). Subnormal/zero inputs
+    return -127 (callers guard)."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    return ((bits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32) - 127
+
+
+def _shared_exp(blocks: jnp.ndarray, spec: MXSpec) -> jnp.ndarray:
+    """Per-block shared exponent, clamped to the scale format's range."""
+    amax = jnp.max(jnp.abs(blocks), axis=-1)
+    e = floor_log2(amax) - spec.elem.emax
+    e = jnp.where(amax > 0, e, spec.scale.min_exp).astype(jnp.float32)
+    return jnp.clip(e, spec.scale.min_exp, spec.scale.max_exp)
+
+
+def quantize_codes(x: jnp.ndarray, spec: MXSpec) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize to (unpacked code indices uint8, shared exponents float32).
+
+    Returned codes index into ``spec.elem.code_values``; exponents are the
+    clamped shared exponents (not yet bias-encoded).
+    """
+    blocks = _blocked(x.astype(jnp.float32), spec.block_size)
+    e = _shared_exp(blocks, spec)
+    scale = jnp.exp2(e)[..., None]
+    normalized = blocks / scale
+    table = jnp.asarray(spec.elem.code_values, dtype=jnp.float32)
+    mids = jnp.asarray(spec.elem.midpoints, dtype=jnp.float32)
+    # round-to-nearest via midpoint bins; saturates at table ends
+    idx = jnp.searchsorted(mids, normalized, side="left")
+    # break exact midpoint ties toward even code index (round-half-to-even on
+    # the grid): if normalized == mids[idx] landing on an odd lower index is
+    # fine for our formats (midpoints are never representable values).
+    return idx.reshape(*x.shape[:-1], -1).astype(jnp.uint8), e
+
+
+def quantize(x: jnp.ndarray, spec: MXSpec) -> MXCompressed:
+    """Full wire-format quantization: bit-packed payload + raw scale bytes."""
+    codes, e = quantize_codes(x, spec)
+    # code indices may exceed the element bit-width's raw range for int
+    # formats (2**b - 1 codes); map index -> raw code (index fits in `bits`
+    # bits because num_codes <= 2**bits).
+    assert spec.elem.num_codes <= 2**spec.elem.bits
+    payload = pack_codes(codes, spec.elem.bits)
+    raw = (e + spec.scale.bias).astype(jnp.uint8)
+    return MXCompressed(payload=payload, scales=raw)
+
+
+def codes_to_values(codes: jnp.ndarray, spec: MXSpec) -> jnp.ndarray:
+    table = jnp.asarray(spec.elem.code_values, dtype=jnp.float32)
+    return table[codes.astype(jnp.int32)]
+
+
+def dequantize(
+    comp: MXCompressed, spec: MXSpec, out_dtype=jnp.float32
+) -> jnp.ndarray:
+    """Invert ``quantize``: payload/scales -> dense tensor."""
+    n_blocks = comp.scales.shape[-1]
+    n_values = n_blocks * spec.block_size
+    codes = unpack_codes(comp.payload, spec.elem.bits, n_values)
+    vals = codes_to_values(codes, spec)
+    blocks = vals.reshape(*vals.shape[:-1], n_blocks, spec.block_size)
+    e = comp.scales.astype(jnp.float32) - spec.scale.bias
+    out = blocks * jnp.exp2(e)[..., None]
+    return out.reshape(*out.shape[:-2], n_values).astype(out_dtype)
+
+
+def fake_quantize(x: jnp.ndarray, spec: MXSpec) -> jnp.ndarray:
+    """Quantize+dequantize without packing (for quality evaluation)."""
+    codes, e = quantize_codes(x, spec)
+    vals = codes_to_values(codes, spec)
+    blocks = _blocked(vals, spec.block_size)
+    out = blocks * jnp.exp2(e)[..., None]
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def quantization_error(x: jnp.ndarray, spec: MXSpec) -> dict:
+    """Quality metrics for a spec on a tensor: relative L2, SQNR (dB), max abs."""
+    xq = fake_quantize(x.astype(jnp.float32), spec)
+    err = xq - x.astype(jnp.float32)
+    sig = jnp.mean(x.astype(jnp.float32) ** 2)
+    noise = jnp.mean(err**2)
+    rel_l2 = jnp.sqrt(noise / jnp.maximum(sig, 1e-30))
+    sqnr_db = 10.0 * jnp.log10(jnp.maximum(sig, 1e-30) / jnp.maximum(noise, 1e-30))
+    return {
+        "rel_l2": rel_l2,
+        "sqnr_db": sqnr_db,
+        "max_abs_err": jnp.max(jnp.abs(err)),
+    }
+
+
+def wire_arrays_shape(shape: Tuple[int, ...], spec: MXSpec):
+    """Shapes/dtypes of the wire arrays for an input of ``shape`` (for
+    ShapeDtypeStruct plumbing)."""
+    n = shape[-1]
+    assert n % spec.block_size == 0
+    n_blocks = n // spec.block_size
+    payload = (*shape[:-1], n * spec.elem.bits // 8)
+    scales = (*shape[:-1], n_blocks)
+    return payload, scales

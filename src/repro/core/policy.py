@@ -1,0 +1,58 @@
+"""Compression policy: *where* and *when* the MX codec is applied.
+
+The paper compresses the collective after every row-parallel TP linear during
+prefill. Decode payloads (one token) are KBs and codec overhead dominates —
+the paper's A100 result shows compression can lose when comm is cheap — so
+the policy carries a ``min_tokens`` gate plus per-collective switches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.formats import MXSpec
+
+__all__ = ["CompressionPolicy", "NO_COMPRESSION", "PAPER_DEFAULT"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPolicy:
+    spec: Optional[MXSpec] = None          # None => uncompressed collectives
+    variant: str = "gather"                # "gather"    = paper Fig 1b:
+                                           #   all-gather compressed partials,
+                                           #   reduce locally (N x comp bytes)
+                                           # "two_phase" = beyond-paper:
+                                           #   compressed reduce-scatter (a2a)
+                                           #   + compressed all-gather
+                                           #   (2 x comp bytes — wins at the
+                                           #   production TP=16 where gather
+                                           #   loses to ring all-reduce)
+    compress_tp_reduce: bool = True        # row-parallel reductions (the paper)
+    compress_all_to_all: bool = False      # MoE dispatch/combine (beyond paper)
+    min_tokens: int = 8                    # compress only if tokens >= gate
+    keep_local_fp: bool = False            # keep own shard in full precision
+    use_pallas: bool = False               # Pallas codec kernels vs pure jnp
+    accum_dtype: str = "float32"           # reduction accumulator
+
+    @property
+    def enabled(self) -> bool:
+        return self.spec is not None
+
+    def active_for(self, n_tokens: int) -> bool:
+        return self.enabled and self.compress_tp_reduce and n_tokens >= self.min_tokens
+
+    def with_spec(self, spec: Optional[MXSpec]) -> "CompressionPolicy":
+        return dataclasses.replace(self, spec=spec)
+
+    def describe(self) -> str:
+        if not self.enabled:
+            return "uncompressed (bf16 psum)"
+        return (
+            f"{self.spec.name} ({self.spec.effective_bits:.2f} eff bits, "
+            f"{self.spec.compression_ratio():.2f}x vs bf16)"
+        )
+
+
+NO_COMPRESSION = CompressionPolicy(spec=None)
+# Table 3 profiling configuration: FP4 E2M1, block 32, E8M0 scale.
+PAPER_DEFAULT = CompressionPolicy(spec=MXSpec.make("fp4_e2m1", 32, "e8m0"))

@@ -1,0 +1,51 @@
+"""The paper's §5.1 compression-scheme search procedure.
+
+Grid-search (value dtype × block size × scale dtype), keep every candidate
+whose quality degradation is below a threshold (paper: < 3 % perplexity
+increase), and among survivors pick the lowest effective bits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, List, Optional, Tuple
+
+from repro.core.formats import (
+    MXSpec,
+    PAPER_BLOCK_SIZES,
+    PAPER_VALUE_DTYPES,
+    spec_grid,
+)
+
+__all__ = ["SearchResult", "search_scheme"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    best: Optional[MXSpec]
+    best_degradation: Optional[float]
+    table: Tuple[Tuple[MXSpec, float], ...]  # every (spec, degradation) tried
+    threshold: float
+
+    def survivors(self) -> List[Tuple[MXSpec, float]]:
+        return [(s, d) for s, d in self.table if d < self.threshold]
+
+
+def search_scheme(
+    eval_fn: Callable[[MXSpec], float],
+    candidates: Optional[Iterable[MXSpec]] = None,
+    *,
+    max_degradation: float = 0.03,
+) -> SearchResult:
+    """Run the §5.1 procedure.
+
+    eval_fn: spec -> relative quality degradation (e.g. perplexity increase
+    fraction, or relative L2 error on captured activations).
+    """
+    if candidates is None:
+        candidates = spec_grid(PAPER_VALUE_DTYPES, PAPER_BLOCK_SIZES, ("e8m0",))
+    table = tuple((spec, float(eval_fn(spec))) for spec in candidates)
+    ok = [(s, d) for s, d in table if d < max_degradation]
+    if not ok:
+        return SearchResult(None, None, table, max_degradation)
+    best, deg = min(ok, key=lambda sd: (sd[0].effective_bits, sd[1]))
+    return SearchResult(best, deg, table, max_degradation)

@@ -1,0 +1,4 @@
+from repro.data.corpus import ByteTokenizer, build_corpus, corpus_tokens
+from repro.data.pipeline import Batches
+
+__all__ = ["ByteTokenizer", "build_corpus", "corpus_tokens", "Batches"]

@@ -1,0 +1,78 @@
+"""Offline text corpus + byte-level tokenizer.
+
+No datasets ship with this container, so the training corpus is built from
+text that is always present offline: the CPython standard library sources
+(plus this repo's own sources). This gives a few tens of MB of real,
+structured text — enough to train the ~10-100M models used to reproduce the
+paper's quality *orderings* (DESIGN.md §2 explains why absolute Wikitext2
+perplexities are out of scope offline).
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+from typing import Iterator, List
+
+import numpy as np
+
+__all__ = ["ByteTokenizer", "build_corpus", "corpus_tokens"]
+
+
+class ByteTokenizer:
+    """UTF-8 byte tokenizer with BOS/EOS; vocab 256 + 2 specials."""
+
+    vocab_size = 258
+    bos = 256
+    eos = 257
+
+    def encode(self, text: str) -> np.ndarray:
+        return np.frombuffer(text.encode("utf-8", errors="ignore"), np.uint8).astype(
+            np.int32
+        )
+
+    def decode(self, ids) -> str:
+        ids = np.asarray(ids)
+        ids = ids[(ids >= 0) & (ids < 256)]
+        return bytes(ids.astype(np.uint8)).decode("utf-8", errors="ignore")
+
+
+def _source_files(max_files: int) -> List[pathlib.Path]:
+    roots = []
+    for p in sys.path:
+        pp = pathlib.Path(p)
+        if pp.is_dir() and (pp / "encodings").exists():  # stdlib dir
+            roots.append(pp)
+    roots.append(pathlib.Path(__file__).resolve().parents[3])  # this repo
+    files: List[pathlib.Path] = []
+    for root in roots:
+        for f in sorted(root.rglob("*.py")):
+            if "test" in f.name or "__pycache__" in str(f):
+                continue
+            files.append(f)
+            if len(files) >= max_files:
+                return files
+    return files
+
+
+def build_corpus(max_bytes: int = 8_000_000, max_files: int = 2000) -> str:
+    chunks, total = [], 0
+    for f in _source_files(max_files):
+        try:
+            text = f.read_text(errors="ignore")
+        except OSError:
+            continue
+        chunks.append(text)
+        total += len(text)
+        if total >= max_bytes:
+            break
+    return "\n".join(chunks)[:max_bytes]
+
+
+def corpus_tokens(max_bytes: int = 8_000_000, *, seed: int = 0) -> np.ndarray:
+    """Tokenized corpus as one long int32 stream (deterministic)."""
+    tok = ByteTokenizer()
+    ids = tok.encode(build_corpus(max_bytes))
+    rng = np.random.default_rng(seed)
+    # shuffle at document granularity is overkill for byte LM; keep stream
+    del rng
+    return ids

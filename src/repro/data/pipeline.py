@@ -1,0 +1,42 @@
+"""Sharding-aware batch pipeline: contiguous next-token-prediction windows
+over a token stream, optionally placed with a NamedSharding."""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Batches"]
+
+
+class Batches:
+    def __init__(
+        self,
+        tokens: np.ndarray,
+        batch_size: int,
+        seq_len: int,
+        *,
+        seed: int = 0,
+        sharding: Optional[jax.sharding.Sharding] = None,
+    ):
+        self.tokens = tokens
+        self.batch = batch_size
+        self.seq = seq_len
+        self.rng = np.random.default_rng(seed)
+        self.sharding = sharding
+        self.n_windows = (len(tokens) - 1) // seq_len
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            yield self.next()
+
+    def next(self) -> dict:
+        starts = self.rng.integers(0, len(self.tokens) - self.seq - 1, self.batch)
+        x = np.stack([self.tokens[s : s + self.seq] for s in starts])
+        y = np.stack([self.tokens[s + 1 : s + self.seq + 1] for s in starts])
+        batch = {"tokens": jnp.asarray(x), "targets": jnp.asarray(y)}
+        if self.sharding is not None:
+            batch = {k: jax.device_put(v, self.sharding) for k, v in batch.items()}
+        return batch

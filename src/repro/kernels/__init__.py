@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: the MX codec.
+
+The paper's whole premise is that compression only wins if encode/decode is
+fast enough not to offset the communication saving (§4.1, §6). These kernels
+are that codec: mx_quant (compress), mx_dequant (+ fused dequant-reduce
+epilogue). ops.py holds the jit'd dispatch wrappers, ref.py the pure-jnp
+oracle the tests compare against (bit-exact).
+"""
+from repro.kernels.ops import mx_dequant_reduce, mx_dequantize, mx_quantize
+
+__all__ = ["mx_quantize", "mx_dequantize", "mx_dequant_reduce"]

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the MX codec kernels.
+
+The reference implementation IS the core library codec (repro.core.mx); the
+Pallas kernels must match it bit-exactly (same shared-exponent selection via
+fp32 exponent-field extraction, same round-to-nearest code tables, same
+packing layout). Tests sweep shapes/dtypes and assert equality.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.formats import MXSpec
+from repro.core.mx import MXCompressed, dequantize as _dequantize, quantize as _quantize
+
+__all__ = ["mx_quantize_ref", "mx_dequantize_ref", "dequant_reduce_ref"]
+
+
+def mx_quantize_ref(x: jnp.ndarray, spec: MXSpec) -> MXCompressed:
+    return _quantize(x, spec)
+
+
+def mx_dequantize_ref(comp: MXCompressed, spec: MXSpec, out_dtype=jnp.float32) -> jnp.ndarray:
+    return _dequantize(comp, spec, out_dtype)
+
+
+def dequant_reduce_ref(comp: MXCompressed, spec: MXSpec, out_dtype=jnp.float32) -> jnp.ndarray:
+    """Dequantize N stacked shards (leading axis) and sum them — the hot
+    epilogue after the compressed all-gather."""
+    vals = _dequantize(comp, spec, jnp.float32)
+    return jnp.sum(vals, axis=0).astype(out_dtype)

@@ -1,0 +1,24 @@
+"""Production mesh construction (function, not module constant — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 4):
+    """Small mesh over host devices (tests/examples)."""
+    n = len(jax.devices())
+    while data * model > n and data > 1:
+        data //= 2
+    while data * model > n and model > 1:
+        model //= 2
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,93 @@
+"""End-to-end training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b --reduced \
+      --steps 200 --batch 8 --seq 128
+
+Runs on whatever devices exist (CPU smoke => --reduced). With multiple
+devices, builds a (data, model) host mesh, shards the train state with the
+production rules, and runs the paper's compressed collectives per --policy.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, get_config, reduced_config
+from repro.core.formats import MXSpec
+from repro.core.policy import CompressionPolicy, NO_COMPRESSION
+from repro.data import Batches, corpus_tokens
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import make_context
+from repro.models.model import Model
+from repro.training import (
+    AdamWConfig, init_train_state, make_train_step, save_checkpoint,
+)
+
+
+def build_policy(args) -> CompressionPolicy:
+    if args.policy == "none":
+        return NO_COMPRESSION
+    return CompressionPolicy(
+        spec=MXSpec.make(args.value_dtype, args.block_size, args.scale_dtype),
+        variant=args.variant,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--policy", default="mx", choices=["mx", "none"])
+    ap.add_argument("--value-dtype", default="fp4_e2m1")
+    ap.add_argument("--block-size", type=int, default=32)
+    ap.add_argument("--scale-dtype", default="e8m0")
+    ap.add_argument("--variant", default="gather", choices=["gather", "two_phase"])
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, vocab_size=258)  # byte tokenizer
+    model = Model(cfg)
+
+    n_dev = len(jax.devices())
+    mesh = make_host_mesh() if n_dev > 1 else None
+    ctx = make_context(mesh, None, policy=build_policy(args))
+    print(f"devices={n_dev} mesh={mesh} policy={ctx.policy.describe()}")
+
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(state["params"]))
+    print(f"arch={cfg.name} params={n_params:,}")
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(50, args.steps // 10 + 1),
+                          total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(model, ctx, opt_cfg), donate_argnums=(0,))
+
+    toks = corpus_tokens(4_000_000)
+    batches = Batches(toks, args.batch, args.seq)
+    t0 = time.time()
+    for step in range(args.steps):
+        state, metrics = step_fn(state, batches.next())
+        if step % args.log_every == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"({(time.time()-t0)/(step+1):.2f}s/step)")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, state, step=args.steps)
+        print(f"saved {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

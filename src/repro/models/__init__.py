@@ -1,0 +1,13 @@
+"""Model zoo: composable blocks + the unified Model wrapper."""
+from repro.models.model import Model
+from repro.configs import ARCHS, get_config, reduced_config
+
+
+def build(arch_id: str, *, reduced: bool = False) -> Model:
+    cfg = get_config(arch_id)
+    if reduced:
+        cfg = reduced_config(cfg)
+    return Model(cfg)
+
+
+__all__ = ["Model", "build", "ARCHS", "get_config", "reduced_config"]

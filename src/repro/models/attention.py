@@ -1,0 +1,220 @@
+"""GQA attention with RoPE, qk-norm, QKV bias, sliding windows, KV cache —
+TP-sharded with the paper's compressed reduction on the output projection.
+
+Design notes (production sharding, see DESIGN.md):
+
+* KV caches are stored FLAT as (B, S, kv_dim = n_kv_heads*head_dim). kv_dim
+  is divisible by the 16-way model axis for every assigned arch (head
+  *counts* often are not: qwen2 has 4 KV heads), and the flat layout is
+  exactly how the column-parallel K/V projections produce the values — no
+  resharding on the cache write path. GSPMD represents the reshape-to-heads
+  sharding natively as a (kv, hd) 2-D tiling.
+
+* Scores are never materialized at (S, T): prefill/training attention runs
+  q-CHUNKED (lax.scan over query blocks, masks built per block), bounding
+  the transient to (B, chunk, H, T) — the pure-JAX analogue of flash
+  attention's blocking, chosen for the TPU dry-run memory envelope.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.tp import TPContext, column_linear, constrain, row_linear
+from repro.models.common import Initializer, apply_rope, init_linear, make_rope, rms_norm
+
+__all__ = ["init_attention", "KVCache", "init_cache", "attention", "attention_specs"]
+
+NEG_INF = -1e30
+_Q_CHUNK = 1024
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, S_max, kv_dim)  flat: n_kv_heads * head_dim
+    v: jnp.ndarray  # (B, S_max, kv_dim)
+
+
+def init_attention(init: Initializer, name: str, cfg: ModelConfig):
+    p = {
+        "wq": init_linear(init, f"{name}/wq", cfg.d_model, cfg.q_dim, cfg.qkv_bias),
+        "wk": init_linear(init, f"{name}/wk", cfg.d_model, cfg.kv_dim, cfg.qkv_bias),
+        "wv": init_linear(init, f"{name}/wv", cfg.d_model, cfg.kv_dim, cfg.qkv_bias),
+        "wo": init_linear(init, f"{name}/wo", cfg.q_dim, cfg.d_model),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"w": init.ones(f"{name}/qn", (cfg.head_dim,))}
+        p["k_norm"] = {"w": init.ones(f"{name}/kn", (cfg.head_dim,))}
+    return p
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, max_len, cfg.kv_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def _flat_kv_pspec(ctx: TPContext):
+    # (B, S, kv_dim): batch over data, kv_dim over model; seq over data for
+    # long-context batch=1 shapes (constrain() drops non-dividing entries)
+    return (ctx.batch, ctx.seq_axis, ctx.axis if ctx.tp else None)
+
+
+def _qkv(ctx: TPContext, params, x, cfg: ModelConfig, positions):
+    B, S = x.shape[:2]
+    q = column_linear(ctx, x, params["wq"]["w"], params["wq"].get("b"))
+    k = column_linear(ctx, x, params["wk"]["w"], params["wk"].get("b"))
+    v = column_linear(ctx, x, params["wv"]["w"], params["wv"].get("b"))
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"]["w"])
+        k = rms_norm(k, params["k_norm"]["w"])
+    if positions is not None:
+        rope = make_rope(positions, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, rope)
+        k = apply_rope(k, rope)
+    return q, k.reshape(B, S, cfg.kv_dim), v  # k/v flat
+
+
+def _attend_block(q, k, v, q_pos, t_pos, *, causal, window, scale, kv_heads):
+    """q (B,Sq,H,hd); k/v flat (B,T,kv_dim); positions 1-D. -> (B,Sq,H*hd)."""
+    B, Sq, H, hd = q.shape
+    T = k.shape[1]
+    KV = kv_heads
+    G = H // KV
+    kh = k.reshape(B, T, KV, hd)
+    vh = v.reshape(B, T, KV, hd)
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bsngd,btnd->bnsgt", qg, kh).astype(jnp.float32) * scale
+    if causal:
+        valid = t_pos[None, :] <= q_pos[:, None]
+    else:
+        valid = jnp.ones((Sq, T), bool) & (t_pos[None, :] >= 0)
+    if window is not None:
+        valid = valid & (t_pos[None, :] > q_pos[:, None] - window)
+    scores = jnp.where(valid[None, None, :, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bnsgt,btnd->bsngd", probs, vh)
+    return out.reshape(B, Sq, H * hd)
+
+
+def _attend(q, k, v, q_pos, t_pos, *, causal, window, scale, kv_heads,
+            chunk: int = _Q_CHUNK):
+    """q-chunked attention: scores transient bounded to (B, chunk, H, T)."""
+    B, S, H, hd = q.shape
+    if S <= chunk:
+        return _attend_block(q, k, v, q_pos, t_pos, causal=causal,
+                             window=window, scale=scale, kv_heads=kv_heads)
+    while S % chunk != 0:
+        chunk //= 2
+    nq = S // chunk
+    qc = q.reshape(B, nq, chunk, H, hd).swapaxes(0, 1)     # (nq,B,c,H,hd)
+    pc = q_pos.reshape(nq, chunk)
+
+    def body(_, xs):
+        q_i, pos_i = xs
+        out = _attend_block(q_i, k, v, pos_i, t_pos, causal=causal,
+                            window=window, scale=scale, kv_heads=kv_heads)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (qc, pc))           # (nq,B,c,H*hd)
+    return outs.swapaxes(0, 1).reshape(B, S, H * hd)
+
+
+def attention(
+    ctx: TPContext,
+    params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    pos: jnp.ndarray,                  # int32 scalar: first position of x
+    cache: Optional[KVCache] = None,   # None => no-cache (training) path
+    window: Optional[int] = None,
+    causal: bool = True,
+    cross_kv: Optional[KVCache] = None,  # encoder K/V for cross-attention
+):
+    """Unified attention: training (no cache), prefill (cache write),
+    decode (S==1 cache append), and cross-attention (cross_kv given).
+
+    Returns (out (B,S,d_model), new_cache).
+    """
+    B, S = x.shape[:2]
+    scale = cfg.head_dim**-0.5
+    a = ctx.axis if ctx.tp else None
+
+    if cross_kv is not None:
+        q = column_linear(ctx, x, params["wq"]["w"], params["wq"].get("b"))
+        q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            q = rms_norm(q, params["q_norm"]["w"])
+        T = cross_kv.k.shape[1]
+        t_pos = jnp.arange(T, dtype=jnp.int32)
+        out = _attend(q, cross_kv.k.astype(q.dtype), cross_kv.v.astype(q.dtype),
+                      jnp.zeros((S,), jnp.int32), t_pos, causal=False,
+                      window=None, scale=scale, kv_heads=cfg.n_kv_heads)
+        out = constrain(ctx, out, ctx.batch, None, a)
+        y = row_linear(ctx, out, params["wo"]["w"], n_tokens=B * S)
+        return y, cache
+
+    positions = pos + jnp.arange(S, dtype=jnp.int32)[None, :]  # (1,S) bcast
+    q, k_new, v_new = _qkv(ctx, params, x, cfg, positions)
+
+    if cache is None:
+        t_pos = positions[0]
+        q_pos = positions[0]
+        k_all, v_all = k_new, v_new
+    else:
+        T = cache.k.shape[1]
+        if ctx.seq_axis is not None and S == 1:
+            # seq-sharded cache (long-context decode): a dynamic-update-slice
+            # on the sharded dim gets SPMD-partitioned into scatter ops that
+            # XLA-CPU aborts on; a masked select partitions trivially and
+            # costs one cache-sized pass (which decode attention does anyway)
+            sel = (jnp.arange(T, dtype=jnp.int32) == pos)[None, :, None]
+            k_all = jnp.where(sel, k_new.astype(cache.k.dtype), cache.k)
+            v_all = jnp.where(sel, v_new.astype(cache.v.dtype), cache.v)
+        else:
+            k_all = jax.lax.dynamic_update_slice(
+                cache.k, k_new.astype(cache.k.dtype), (0, pos, 0))
+            v_all = jax.lax.dynamic_update_slice(
+                cache.v, v_new.astype(cache.v.dtype), (0, pos, 0))
+        pspec = _flat_kv_pspec(ctx)
+        k_all = constrain(ctx, k_all, *pspec)
+        v_all = constrain(ctx, v_all, *pspec)
+        cache = KVCache(k=k_all, v=v_all)
+        t_pos = jnp.arange(T, dtype=jnp.int32)
+        q_pos = pos + jnp.arange(S, dtype=jnp.int32)
+
+    out = _attend(q, k_all.astype(q.dtype), v_all.astype(q.dtype), q_pos, t_pos,
+                  causal=causal, window=window, scale=scale,
+                  kv_heads=cfg.n_kv_heads)
+    out = constrain(ctx, out, ctx.batch, None, a)
+    y = row_linear(ctx, out, params["wo"]["w"], n_tokens=B * S)
+    return y, cache
+
+
+def attention_specs(cfg: ModelConfig, ctx: TPContext):
+    """PartitionSpec pytree matching init_attention output."""
+    from jax.sharding import PartitionSpec as P
+
+    a = ctx.axis if ctx.tp else None
+    d = ctx.wdata
+    lin = lambda fin_s, fout_s: {"w": P(fin_s, fout_s)}
+
+    def with_bias(base, fout_s):
+        if cfg.qkv_bias:
+            return {**base, "b": P(fout_s)}
+        return base
+
+    p = {
+        "wq": with_bias(lin(d, a), a),
+        "wk": with_bias(lin(d, a), a),
+        "wv": with_bias(lin(d, a), a),
+        "wo": lin(a, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"w": P(None)}
+        p["k_norm"] = {"w": P(None)}
+    return p

@@ -1,0 +1,121 @@
+"""Shared model components: norms, RoPE, embeddings, parameter init."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tp import TPContext, constrain
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "make_rope",
+    "apply_rope",
+    "embed",
+    "unembed",
+    "init_linear",
+    "init_norm",
+    "Initializer",
+]
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def make_rope(positions: jnp.ndarray, head_dim: int, theta: float) -> jnp.ndarray:
+    """positions (...,) -> complex-free rope table (..., head_dim//2, 2)."""
+    half = head_dim // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.stack([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def apply_rope(x: jnp.ndarray, rope: jnp.ndarray) -> jnp.ndarray:
+    """x (B, S, H, D), rope (B, S, D//2, 2) or (S, D//2, 2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if rope.ndim == 3:  # (S, half, 2) -> broadcast batch
+        rope = rope[None]
+    cos = rope[..., 0][:, :, None, :]
+    sin = rope[..., 1][:, :, None, :]
+    cos, sin = cos.astype(x.dtype), sin.astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def embed(ctx: TPContext, table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = table[tokens]
+    return constrain(ctx, x, ctx.batch, None, None)
+
+
+def unembed(ctx: TPContext, x: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Project to vocab logits; logits vocab-sharded over the TP axis."""
+    logits = jnp.einsum("...d,vd->...v", x, table.astype(x.dtype))
+    if ctx.tp:
+        logits = constrain(ctx, logits, ctx.batch,
+                           *([None] * (logits.ndim - 2)), ctx.axis)
+    return logits
+
+
+class Initializer:
+    """Deterministic per-path parameter init (split keys by name)."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.bfloat16):
+        self.key = key
+        self.dtype = dtype
+
+    def _fold(self, name: str) -> jax.Array:
+        import zlib  # crc32: stable across processes (unlike builtin hash)
+
+        k = self.key
+        for part in name.split("/"):
+            k = jax.random.fold_in(k, zlib.crc32(part.encode()) % (2**31))
+        return k
+
+    def linear(self, name: str, shape, scale: Optional[float] = None) -> jnp.ndarray:
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        s = scale if scale is not None else fan_in**-0.5
+        return (jax.random.normal(self._fold(name), shape, jnp.float32) * s).astype(
+            self.dtype
+        )
+
+    def zeros(self, name: str, shape) -> jnp.ndarray:
+        del name
+        return jnp.zeros(shape, self.dtype)
+
+    def ones(self, name: str, shape) -> jnp.ndarray:
+        del name
+        return jnp.ones(shape, self.dtype)
+
+    def value(self, name: str, arr) -> jnp.ndarray:
+        del name
+        return jnp.asarray(arr, self.dtype)
+
+
+def init_linear(init: Initializer, name: str, fin: int, fout: int,
+                bias: bool = False):
+    p = {"w": init.linear(name + "/w", (fin, fout))}
+    if bias:
+        p["b"] = init.zeros(name + "/b", (fout,))
+    return p
+
+
+def init_norm(init: Initializer, name: str, dim: int, kind: str = "rmsnorm"):
+    if kind == "rmsnorm":
+        return {"w": init.ones(name + "/w", (dim,))}
+    return {"w": init.ones(name + "/w", (dim,)), "b": init.zeros(name + "/b", (dim,))}

@@ -1,0 +1,40 @@
+"""Stub modality frontends (the one sanctioned carve-out, see DESIGN.md).
+
+[vlm]   the ViT/SigLIP encoder + projector is stubbed: ``patch_embeds``
+        arrive as precomputed (B, n_patches, d_model) embeddings.
+[audio] the mel-spectrogram + conv feature extractor is stubbed:
+        ``encoder_frames`` arrive as (B, encoder_seq, d_model) embeddings.
+
+These helpers generate correctly-shaped stand-ins (random for smoke tests,
+ShapeDtypeStruct for the dry-run).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["patch_embed_stub", "audio_frames_stub", "frontend_shapes"]
+
+
+def frontend_shapes(cfg: ModelConfig, batch: int):
+    if cfg.frontend == "vision":
+        return {"patch_embeds": (batch, cfg.n_patches, cfg.d_model)}
+    if cfg.frontend == "audio":
+        return {"encoder_frames": (batch, cfg.encoder_seq, cfg.d_model)}
+    return {}
+
+
+def patch_embed_stub(cfg: ModelConfig, batch: int, key=None, dtype=jnp.bfloat16):
+    shape = (batch, cfg.n_patches, cfg.d_model)
+    if key is None:
+        return jnp.zeros(shape, dtype)
+    return (jax.random.normal(key, shape, jnp.float32) * cfg.d_model**-0.5).astype(dtype)
+
+
+def audio_frames_stub(cfg: ModelConfig, batch: int, key=None, dtype=jnp.bfloat16):
+    shape = (batch, cfg.encoder_seq, cfg.d_model)
+    if key is None:
+        return jnp.zeros(shape, dtype)
+    return (jax.random.normal(key, shape, jnp.float32) * cfg.d_model**-0.5).astype(dtype)

@@ -1,0 +1,53 @@
+"""Dense MLP (SwiGLU / GELU) with TP column->row split and the paper's
+compressed reduction on the down projection."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.tp import TPContext, column_linear, constrain, fused_mlp, row_linear
+from repro.models.common import Initializer, init_linear
+
+__all__ = ["init_mlp", "mlp", "mlp_specs"]
+
+_ACT = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}
+
+
+def init_mlp(init: Initializer, name: str, cfg: ModelConfig, d_ff: int = 0):
+    ff = d_ff or cfg.d_ff
+    p = {
+        "up": init_linear(init, f"{name}/up", cfg.d_model, ff),
+        "down": init_linear(init, f"{name}/down", ff, cfg.d_model),
+    }
+    if cfg.activation == "silu":  # gated
+        p["gate"] = init_linear(init, f"{name}/gate", cfg.d_model, ff)
+    return p
+
+
+def mlp(ctx: TPContext, params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    act = _ACT[cfg.activation]
+    w_gate = params.get("gate", {}).get("w")
+    n_tokens = 1
+    for d in x.shape[:-1]:
+        n_tokens *= int(d)
+    if ctx.fuse_mlp_island and ctx.tp:
+        return fused_mlp(ctx, x, w_gate, params["up"]["w"], params["down"]["w"],
+                         act=act, n_tokens=n_tokens)
+    h = column_linear(ctx, x, params["up"]["w"])
+    if w_gate is not None:
+        h = act(column_linear(ctx, x, w_gate)) * h
+    else:
+        h = act(h)
+    return row_linear(ctx, h, params["down"]["w"], n_tokens=n_tokens)
+
+
+def mlp_specs(cfg: ModelConfig, ctx: TPContext):
+    from jax.sharding import PartitionSpec as P
+
+    a = ctx.axis if ctx.tp else None
+    d = ctx.wdata
+    p = {"up": {"w": P(d, a)}, "down": {"w": P(a, d)}}
+    if cfg.activation == "silu":
+        p["gate"] = {"w": P(d, a)}
+    return p

@@ -1,0 +1,314 @@
+"""The unified Model: init / train-forward / prefill / decode for every
+architecture family, plus ShapeDtypeStruct input specs for the dry-run.
+
+Caches are dicts: {"layers": [...per-layer...], "pos": int32 scalar} with an
+extra "cross" list (encoder K/V) for encoder-decoder models.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core.tp import TPContext, constrain, row_linear
+from repro.models.attention import KVCache, attention, attention_specs, init_attention
+from repro.models.common import (
+    Initializer, embed, init_norm, rms_norm, unembed,
+)
+from repro.models.mlp import init_mlp, mlp, mlp_specs
+from repro.models.transformer import (
+    apply_stack, init_stack, init_stack_cache, stack_specs,
+)
+
+__all__ = ["Model"]
+
+AUX_WEIGHTS = {"load_balance": 1e-2, "router_z": 1e-3}
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+
+    def init_params(self, rng: jax.Array) -> Dict[str, Any]:
+        cfg = self.cfg
+        init = Initializer(rng, jnp.dtype(cfg.dtype))
+        p: Dict[str, Any] = {
+            "embed": {"w": init.linear("embed", (cfg.vocab_size, cfg.d_model),
+                                       scale=cfg.d_model**-0.5)},
+            "layers": init_stack(init, cfg),
+            "final_norm": init_norm(init, "final_norm", cfg.d_model, cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = {"w": init.linear("lm_head", (cfg.vocab_size, cfg.d_model))}
+        if cfg.frontend == "vision":
+            p["mm_proj"] = {"w": init.linear("mm_proj", (cfg.d_model, cfg.d_model))}
+        if cfg.encoder_decoder:
+            enc_cfg = cfg
+            p["enc_layers"] = [
+                {
+                    "ln1": init_norm(init, f"enc{i}/ln1", cfg.d_model, cfg.norm),
+                    "core": init_attention(init, f"enc{i}/attn", enc_cfg),
+                    "ln2": init_norm(init, f"enc{i}/ln2", cfg.d_model, cfg.norm),
+                    "mlp": init_mlp(init, f"enc{i}/mlp", enc_cfg),
+                }
+                for i in range(cfg.n_encoder_layers)
+            ]
+            p["enc_norm"] = init_norm(init, "enc_norm", cfg.d_model, cfg.norm)
+            p["xattn"] = [
+                {
+                    "ln": init_norm(init, f"x{i}/ln", cfg.d_model, cfg.norm),
+                    "core": init_attention(init, f"x{i}/attn", cfg),
+                }
+                for i in range(cfg.n_layers)
+            ]
+        return p
+
+    def param_specs(self, ctx: TPContext):
+        cfg = self.cfg
+        a = ctx.axis if ctx.tp else None
+        d = ctx.wdata
+        p: Dict[str, Any] = {
+            "embed": {"w": P(a, d)},
+            "layers": stack_specs(cfg, ctx),
+            "final_norm": {"w": P(None)},
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = {"w": P(a, d)}
+        if cfg.frontend == "vision":
+            p["mm_proj"] = {"w": P(d, a)}
+        if cfg.encoder_decoder:
+            enc_layer = {
+                "ln1": {"w": P(None)},
+                "core": attention_specs(cfg, ctx),
+                "ln2": {"w": P(None)},
+                "mlp": mlp_specs(cfg, ctx),
+            }
+            p["enc_layers"] = [enc_layer for _ in range(cfg.n_encoder_layers)]
+            p["enc_norm"] = {"w": P(None)}
+            p["xattn"] = [
+                {"ln": {"w": P(None)}, "core": attention_specs(cfg, ctx)}
+                for _ in range(cfg.n_layers)
+            ]
+        return p
+
+    # --------------------------------------------------------------- encoder
+
+    def _encode(self, ctx: TPContext, params, frames: jnp.ndarray) -> jnp.ndarray:
+        """Whisper-style bidirectional encoder over stub frame embeddings."""
+        cfg = self.cfg
+        x = frames
+        pos0 = jnp.int32(0)
+        for lp in params["enc_layers"]:
+            h = rms_norm(x, lp["ln1"]["w"])
+            out, _ = attention(ctx, lp["core"], h, cfg, pos=pos0, causal=False)
+            x = x + out
+            h = rms_norm(x, lp["ln2"]["w"])
+            x = x + mlp(ctx, lp["mlp"], h, cfg)
+        return rms_norm(x, params["enc_norm"]["w"])
+
+    def _cross_kv(self, ctx: TPContext, params, enc_out: jnp.ndarray):
+        """Precompute per-decoder-layer cross-attention K/V from encoder out."""
+        cfg = self.cfg
+        B, F, _ = enc_out.shape
+        kvs = []
+        for xp in params["xattn"]:
+            k = jnp.einsum("bfd,de->bfe", enc_out, xp["core"]["wk"]["w"].astype(enc_out.dtype))
+            v = jnp.einsum("bfd,de->bfe", enc_out, xp["core"]["wv"]["w"].astype(enc_out.dtype))
+            kvs.append(KVCache(k=k, v=v))  # flat (B, F, kv_dim)
+        return kvs
+
+    # ----------------------------------------------------------- embeddings
+
+    def _embed_inputs(self, ctx: TPContext, params, batch) -> jnp.ndarray:
+        cfg = self.cfg
+        x = embed(ctx, params["embed"]["w"], batch["tokens"])
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+        if cfg.frontend == "vision" and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(x.dtype)
+            pe = jnp.einsum("bpd,de->bpe", pe, params["mm_proj"]["w"].astype(x.dtype))
+            x = jnp.concatenate([pe, x], axis=1)  # early fusion
+        return x
+
+    def _apply_cross(self, ctx, params, x, cross_kv):
+        cfg = self.cfg
+        if cross_kv is None:
+            return x
+        for i, xp in enumerate(params["xattn"]):
+            h = rms_norm(x, xp["ln"]["w"])
+            out, _ = attention(ctx, xp["core"], h, cfg, pos=jnp.int32(0),
+                               cross_kv=cross_kv[i])
+            x = x + out
+        return x
+
+    # ----------------------------------------------------------------- train
+
+    def loss(self, ctx: TPContext, params, batch) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        x = self._embed_inputs(ctx, params, batch)
+        cross_kv = None
+        if cfg.encoder_decoder:
+            enc_out = self._encode(ctx, params, batch["encoder_frames"])
+            cross_kv = self._cross_kv(ctx, params, enc_out)
+
+        pos = jnp.int32(0)
+        if cross_kv is not None:
+            # interleave cross-attn per layer for enc-dec: apply self stack
+            # layer-by-layer with cross after each (whisper block order:
+            # self-attn, cross-attn, mlp)
+            x, aux = self._encdec_decoder(ctx, params, x, cross_kv)
+        else:
+            x, _, aux = apply_stack(ctx, cfg, params["layers"], x, pos=pos)
+        x = rms_norm(x, params["final_norm"]["w"])
+
+        if cfg.frontend == "vision":
+            x = x[:, cfg.n_patches :]  # loss on text positions only
+
+        head = params.get("lm_head", params["embed"])["w"]
+        logits = unembed(ctx, x, head).astype(jnp.float32)
+        targets = batch["targets"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(logz - tgt)
+        total = ce
+        metrics = {"ce": ce}
+        for k, v in aux.items():
+            w = AUX_WEIGHTS.get(k, 0.0)
+            total = total + w * v / max(1, cfg.n_layers)
+            metrics[k] = v
+        metrics["loss"] = total
+        return total, metrics
+
+    def _encdec_decoder(self, ctx, params, x, cross_kv):
+        cfg = self.cfg
+        from repro.models.transformer import apply_layer
+
+        aux_total: Dict[str, jnp.ndarray] = {}
+        pos = jnp.int32(0)
+        for i, spec in enumerate(cfg.layers):
+            x, _, aux = apply_layer(ctx, cfg, spec, params["layers"][i], x, pos=pos)
+            # cross-attention sublayer
+            xp = params["xattn"][i]
+            h = rms_norm(x, xp["ln"]["w"])
+            out, _ = attention(ctx, xp["core"], h, cfg, pos=pos, cross_kv=cross_kv[i])
+            x = x + out
+            for k, v in aux.items():
+                aux_total[k] = aux_total.get(k, 0.0) + v
+        return x, aux_total
+
+    # ----------------------------------------------------------------- serve
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cache = {
+            "layers": init_stack_cache(self.cfg, batch, max_len, dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+        if self.cfg.encoder_decoder:
+            cfg = self.cfg
+            cache["cross"] = [
+                KVCache(
+                    k=jnp.zeros((batch, cfg.encoder_seq, cfg.kv_dim), dtype),
+                    v=jnp.zeros((batch, cfg.encoder_seq, cfg.kv_dim), dtype),
+                )
+                for _ in range(cfg.n_layers)
+            ]
+        return cache
+
+    def prefill(self, ctx: TPContext, params, batch, cache) -> Tuple[jnp.ndarray, Any]:
+        """Process the prompt; returns (last-token logits (B, V), cache)."""
+        cfg = self.cfg
+        x = self._embed_inputs(ctx, params, batch)
+        cross_kv = cache.get("cross")
+        if cfg.encoder_decoder:
+            enc_out = self._encode(ctx, params, batch["encoder_frames"])
+            cross_kv = self._cross_kv(ctx, params, enc_out)
+
+        pos = jnp.int32(0)
+        if cfg.encoder_decoder:
+            x, new_layer_caches = self._serve_encdec(
+                ctx, params, x, cache["layers"], cross_kv, pos, decode=False)
+        else:
+            x, new_layer_caches, _ = apply_stack(
+                ctx, cfg, params["layers"], x, pos=pos, caches=cache["layers"])
+        x = rms_norm(x[:, -1:, :], params["final_norm"]["w"])
+        head = params.get("lm_head", params["embed"])["w"]
+        logits = unembed(ctx, x, head)[:, 0]
+        prompt_len = batch["tokens"].shape[1] + (
+            cfg.n_patches if cfg.frontend == "vision" else 0
+        )
+        new_cache = {"layers": new_layer_caches,
+                     "pos": jnp.asarray(prompt_len, jnp.int32)}
+        if cfg.encoder_decoder:
+            new_cache["cross"] = cross_kv
+        return logits, new_cache
+
+    def decode_step(self, ctx: TPContext, params, tokens, cache) -> Tuple[jnp.ndarray, Any]:
+        """One decode step: tokens (B, 1) -> (logits (B, V), cache)."""
+        cfg = self.cfg
+        x = embed(ctx, params["embed"]["w"], tokens)
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+        pos = cache["pos"]
+        if cfg.encoder_decoder:
+            x, new_layer_caches = self._serve_encdec(
+                ctx, params, x, cache["layers"], cache["cross"], pos, decode=True)
+        else:
+            x, new_layer_caches, _ = apply_stack(
+                ctx, cfg, params["layers"], x, pos=pos, caches=cache["layers"],
+                decode=True)
+        x = rms_norm(x, params["final_norm"]["w"])
+        head = params.get("lm_head", params["embed"])["w"]
+        logits = unembed(ctx, x, head)[:, 0]
+        new_cache = {**cache, "layers": new_layer_caches, "pos": pos + 1}
+        return logits, new_cache
+
+    def _serve_encdec(self, ctx, params, x, layer_caches, cross_kv, pos, *, decode):
+        cfg = self.cfg
+        from repro.models.transformer import apply_layer
+
+        new_caches = []
+        for i, spec in enumerate(cfg.layers):
+            x, c, _ = apply_layer(ctx, cfg, spec, params["layers"][i], x,
+                                  pos=pos, cache=layer_caches[i], decode=decode)
+            new_caches.append(c)
+            xp = params["xattn"][i]
+            h = rms_norm(x, xp["ln"]["w"])
+            out, _ = attention(ctx, xp["core"], h, cfg, pos=pos, cross_kv=cross_kv[i])
+            x = x + out
+        return x, new_caches
+
+    # ------------------------------------------------------------ input specs
+
+    def input_specs(self, shape: InputShape, dtype=jnp.bfloat16) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+
+        if shape.kind == "train":
+            text = S - (cfg.n_patches if cfg.frontend == "vision" else 0)
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((B, text), i32),
+                "targets": jax.ShapeDtypeStruct((B, text), i32),
+            }
+            if cfg.frontend == "vision":
+                specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_patches, cfg.d_model), dtype)
+            if cfg.encoder_decoder:
+                specs["encoder_frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_seq, cfg.d_model), dtype)
+        elif shape.kind == "prefill":
+            text = S - (cfg.n_patches if cfg.frontend == "vision" else 0)
+            specs = {"tokens": jax.ShapeDtypeStruct((B, text), i32)}
+            if cfg.frontend == "vision":
+                specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_patches, cfg.d_model), dtype)
+            if cfg.encoder_decoder:
+                specs["encoder_frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_seq, cfg.d_model), dtype)
+        else:  # decode
+            specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+        return specs

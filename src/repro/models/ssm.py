@@ -1,0 +1,186 @@
+"""Mamba (selective SSM) block — chunked associative-scan prefill, O(1)-state
+decode, channels TP-sharded, out-projection reduction compressed per paper.
+
+The selective-scan recurrence  h_t = exp(dt_t*A) h_{t-1} + dt_t*B_t*x_t  is a
+first-order linear recurrence, computed chunk-wise: a lax.scan over chunks
+carries the (B, d_inner, N) state; within a chunk a lax.associative_scan
+parallelizes. The (B, L, d_inner, N) expansion is materialized only per
+chunk — with d_inner sharded over the TP axis it stays VMEM-friendly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.tp import TPContext, column_linear, constrain, row_linear
+from repro.models.common import Initializer, init_linear
+
+__all__ = ["init_mamba", "MambaCache", "init_mamba_cache", "mamba"]
+
+_CHUNK = 64
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray  # (B, d_conv-1, d_inner) trailing conv inputs
+    ssm: jnp.ndarray   # (B, d_inner, N) recurrent state
+
+
+def init_mamba(init: Initializer, name: str, cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.ssm_d_inner
+    N, dc, dtr = cfg.ssm_d_state, cfg.ssm_d_conv, cfg.dt_rank
+    a_init = np.broadcast_to(np.arange(1, N + 1, dtype=np.float32), (di, N))
+    return {
+        "in_x": init_linear(init, f"{name}/in_x", d, di),
+        "in_z": init_linear(init, f"{name}/in_z", d, di),
+        "conv_w": init.linear(f"{name}/conv_w", (dc, di), scale=dc**-0.5),
+        "conv_b": init.zeros(f"{name}/conv_b", (di,)),
+        "x_proj": init_linear(init, f"{name}/x_proj", di, dtr + 2 * N),
+        "dt_proj": {
+            "w": init.linear(f"{name}/dt_w", (dtr, di)),
+            "b": init.value(f"{name}/dt_b", np.log(np.expm1(0.01)) * np.ones(di)),
+        },
+        "A_log": init.value(f"{name}/A_log", np.log(a_init)),
+        "D": init.ones(f"{name}/D", (di,)),
+        "out_proj": init_linear(init, f"{name}/out", di, d),
+    }
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MambaCache:
+    di = cfg.ssm_d_inner
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.ssm_d_conv - 1, di), dtype),
+        ssm=jnp.zeros((batch, di, cfg.ssm_d_state), dtype),
+    )
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 history: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Depthwise causal conv via static shifts. x (B,S,di), w (dc,di)."""
+    dc = w.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], dc - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([history.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    S = x.shape[1]
+    for i in range(dc):  # dc == 4: cheap static unroll
+        out = out + xp[:, i : i + S, :] * w[i]
+    return out + b.astype(x.dtype)
+
+
+def _scan_chunks(dt, x, Bm, Cm, A, h0, chunk: int):
+    """Chunked selective scan. dt/x (B,S,di), Bm/Cm (B,S,N), A (di,N),
+    h0 (B,di,N). Returns (y (B,S,di), h_final)."""
+    Bsz, S, di = x.shape
+    N = A.shape[-1]
+    n_chunks = S // chunk
+
+    dtc = dt.reshape(Bsz, n_chunks, chunk, di).swapaxes(0, 1)
+    xc = x.reshape(Bsz, n_chunks, chunk, di).swapaxes(0, 1)
+    Bc = Bm.reshape(Bsz, n_chunks, chunk, N).swapaxes(0, 1)
+    Cc = Cm.reshape(Bsz, n_chunks, chunk, N).swapaxes(0, 1)
+
+    def step(h, inputs):
+        dt_k, x_k, B_k, C_k = inputs  # (B, L, ...)
+        a = jnp.exp(dt_k[..., None] * A)                      # (B,L,di,N)
+        b = (dt_k * x_k)[..., None] * B_k[:, :, None, :]      # (B,L,di,N)
+
+        def comb(l, r):
+            return (r[0] * l[0], r[0] * l[1] + r[1])
+
+        aa, bb = jax.lax.associative_scan(comb, (a, b), axis=1)
+        h_all = aa * h[:, None] + bb                          # (B,L,di,N)
+        y = jnp.einsum("bldn,bln->bld", h_all, C_k)
+        return h_all[:, -1], y
+
+    h_final, ys = jax.lax.scan(step, h0, (dtc, xc, Bc, Cc))
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, di)
+    return y, h_final
+
+
+def mamba(
+    ctx: TPContext,
+    params,
+    u: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    cache: Optional[MambaCache] = None,
+    decode: bool = False,
+) -> Tuple[jnp.ndarray, Optional[MambaCache]]:
+    """u (B, S, d_model) -> (out, new_cache). decode => S == 1, O(1) update."""
+    B, S, _ = u.shape
+    di, N, dtr = cfg.ssm_d_inner, cfg.ssm_d_state, cfg.dt_rank
+    mdl = ctx.axis if ctx.tp else None
+
+    x = column_linear(ctx, u, params["in_x"]["w"])   # (B,S,di) di over model
+    z = column_linear(ctx, u, params["in_z"]["w"])
+
+    history = cache.conv if cache is not None else None
+    x_conv = _causal_conv(x, params["conv_w"].astype(x.dtype),
+                          params["conv_b"], history)
+    new_conv = None
+    if cache is not None:
+        tail = jnp.concatenate([cache.conv.astype(x.dtype), x], axis=1)[
+            :, -(cfg.ssm_d_conv - 1) :, :
+        ]
+        new_conv = tail.astype(cache.conv.dtype)
+    x = jax.nn.silu(x_conv)
+    x = constrain(ctx, x, ctx.batch, None, mdl)
+
+    bcd = jnp.einsum("bsd,dk->bsk", x, params["x_proj"]["w"].astype(x.dtype))
+    dt_raw = bcd[..., :dtr]
+    Bm = bcd[..., dtr : dtr + N].astype(jnp.float32)
+    Cm = bcd[..., dtr + N :].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_raw, params["dt_proj"]["w"].astype(x.dtype))
+        .astype(jnp.float32)
+        + params["dt_proj"]["b"].astype(jnp.float32)
+    )
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (di, N)
+    x32 = x.astype(jnp.float32)
+
+    if decode:
+        assert cache is not None and S == 1
+        a = jnp.exp(dt[:, 0, :, None] * A)                     # (B,di,N)
+        b = (dt[:, 0] * x32[:, 0])[..., None] * Bm[:, 0, None, :]
+        h = a * cache.ssm + b
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None, :]  # (B,1,di)
+        new_ssm = h
+    else:
+        chunk = _CHUNK
+        while S % chunk != 0:
+            chunk //= 2
+        h0 = (cache.ssm if cache is not None
+              else jnp.zeros((B, di, N), jnp.float32))
+        y, new_ssm = _scan_chunks(dt, x32, Bm, Cm, A, h0, chunk)
+
+    y = (y + params["D"].astype(jnp.float32) * x32).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = constrain(ctx, y, ctx.batch, None, mdl)
+    out = row_linear(ctx, y, params["out_proj"]["w"], n_tokens=B * S)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = MambaCache(conv=new_conv, ssm=new_ssm.astype(cache.ssm.dtype))
+    return out, new_cache
+
+
+def mamba_specs(cfg: ModelConfig, ctx: TPContext):
+    from jax.sharding import PartitionSpec as P
+
+    a = ctx.axis if ctx.tp else None
+    d = ctx.wdata
+    return {
+        "in_x": {"w": P(d, a)},
+        "in_z": {"w": P(d, a)},
+        "conv_w": P(None, a),
+        "conv_b": P(a),
+        "x_proj": {"w": P(a, None)},
+        "dt_proj": {"w": P(None, a), "b": P(a)},
+        "A_log": P(a, None),
+        "D": P(a),
+        "out_proj": {"w": P(a, d)},
+    }

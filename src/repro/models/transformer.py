@@ -1,0 +1,249 @@
+"""Generic decoder stack: composes attention / Mamba / xLSTM blocks with
+dense-MLP or MoE sublayers according to the config's per-layer schedule.
+Covers dense, MoE, SSM, hybrid, and the decoder halves of VLM / enc-dec.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.core.tp import TPContext
+from repro.models.attention import (
+    KVCache, attention, attention_specs, init_attention, init_cache,
+)
+from repro.models.common import Initializer, init_norm, rms_norm
+from repro.models.mlp import init_mlp, mlp, mlp_specs
+from repro.models.moe import init_moe, moe, moe_specs
+from repro.models.ssm import (
+    MambaCache, init_mamba, init_mamba_cache, mamba, mamba_specs,
+)
+from repro.models.xlstm import (
+    MLSTMCache, SLSTMCache, init_mlstm, init_mlstm_cache, init_slstm,
+    init_slstm_cache, mlstm, mlstm_specs, slstm, slstm_specs,
+)
+
+__all__ = [
+    "init_layer", "init_layer_cache", "apply_layer", "layer_specs",
+    "init_stack", "apply_stack", "stack_specs", "init_stack_cache",
+]
+
+
+def _has_mlp_sublayer(cfg: ModelConfig, spec: LayerSpec) -> bool:
+    # xLSTM blocks own their feed-forward; attn/mamba blocks get one when the
+    # config has an FFN (jamba: mamba layers also carry MLP/MoE sublayers).
+    return spec.kind in ("attn", "mamba") and (cfg.d_ff > 0 or spec.moe)
+
+
+def init_layer(init: Initializer, name: str, cfg: ModelConfig, spec: LayerSpec):
+    p: Dict[str, Any] = {"ln1": init_norm(init, f"{name}/ln1", cfg.d_model, cfg.norm)}
+    if spec.kind == "attn":
+        p["core"] = init_attention(init, f"{name}/attn", cfg)
+    elif spec.kind == "mamba":
+        p["core"] = init_mamba(init, f"{name}/mamba", cfg)
+    elif spec.kind == "mlstm":
+        p["core"] = init_mlstm(init, f"{name}/mlstm", cfg)
+    elif spec.kind == "slstm":
+        p["core"] = init_slstm(init, f"{name}/slstm", cfg)
+    else:
+        raise ValueError(spec.kind)
+    if _has_mlp_sublayer(cfg, spec):
+        p["ln2"] = init_norm(init, f"{name}/ln2", cfg.d_model, cfg.norm)
+        if spec.moe:
+            p["moe"] = init_moe(init, f"{name}/moe", cfg)
+        else:
+            p["mlp"] = init_mlp(init, f"{name}/mlp", cfg)
+    return p
+
+
+def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int,
+                     dtype=jnp.bfloat16):
+    if spec.kind == "attn":
+        # sliding-window layers only need a window-sized cache (ring buffer
+        # handled by position masking; allocate full length for simplicity
+        # unless window < max_len — see serving/kv_cache.py ring variant)
+        return init_cache(cfg, batch, max_len, dtype)
+    if spec.kind == "mamba":
+        return init_mamba_cache(cfg, batch)
+    if spec.kind == "mlstm":
+        return init_mlstm_cache(cfg, batch)
+    if spec.kind == "slstm":
+        return init_slstm_cache(cfg, batch)
+    raise ValueError(spec.kind)
+
+
+def apply_layer(
+    ctx: TPContext,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    params,
+    x: jnp.ndarray,
+    *,
+    pos,
+    cache=None,
+    decode: bool = False,
+) -> Tuple[jnp.ndarray, Any, Dict[str, jnp.ndarray]]:
+    from repro.core.tp import constrain
+
+    aux: Dict[str, jnp.ndarray] = {}
+    h = rms_norm(x, params["ln1"]["w"])
+    if spec.kind == "attn":
+        out, cache = attention(ctx, params["core"], h, cfg, pos=pos, cache=cache,
+                               window=spec.window)
+    elif spec.kind == "mamba":
+        out, cache = mamba(ctx, params["core"], h, cfg, cache=cache, decode=decode)
+    elif spec.kind == "mlstm":
+        out, cache = mlstm(ctx, params["core"], h, cfg, cache=cache, decode=decode)
+    elif spec.kind == "slstm":
+        out, cache = slstm(ctx, params["core"], h, cfg, cache=cache, decode=decode)
+    else:
+        raise ValueError(spec.kind)
+    # pin the residual stream's batch sharding at every sublayer boundary —
+    # GSPMD otherwise drifts to batch-replicated through island/scan edges
+    x = constrain(ctx, x + out, ctx.batch, None, None)
+    if _has_mlp_sublayer(cfg, spec):
+        h = rms_norm(x, params["ln2"]["w"])
+        if spec.moe:
+            out, moe_aux = moe(ctx, params["moe"], h, cfg)
+            aux.update(moe_aux)
+        else:
+            out = mlp(ctx, params["mlp"], h, cfg)
+        x = constrain(ctx, x + out, ctx.batch, None, None)
+    return x, cache, aux
+
+
+def layer_specs(cfg: ModelConfig, spec: LayerSpec, ctx: TPContext):
+    from jax.sharding import PartitionSpec as P
+
+    p: Dict[str, Any] = {"ln1": {"w": P(None)}}
+    if spec.kind == "attn":
+        p["core"] = attention_specs(cfg, ctx)
+    elif spec.kind == "mamba":
+        p["core"] = mamba_specs(cfg, ctx)
+    elif spec.kind == "mlstm":
+        p["core"] = mlstm_specs(cfg, ctx)
+    elif spec.kind == "slstm":
+        p["core"] = slstm_specs(cfg, ctx)
+    if _has_mlp_sublayer(cfg, spec):
+        p["ln2"] = {"w": P(None)}
+        if spec.moe:
+            p["moe"] = moe_specs(cfg, ctx)
+        else:
+            p["mlp"] = mlp_specs(cfg, ctx)
+    return p
+
+
+def init_stack(init: Initializer, cfg: ModelConfig):
+    return [init_layer(init, f"layer{i}", cfg, spec)
+            for i, spec in enumerate(cfg.layers)]
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return [init_layer_cache(cfg, spec, batch, max_len, dtype)
+            for spec in cfg.layers]
+
+
+def scan_period(cfg: ModelConfig) -> int:
+    """Smallest p with layers[i] == layers[i % p] — the repeating unit for
+    lax.scan-over-layers (compile-time lever: one unrolled period instead of
+    n_layers copies in the HLO)."""
+    for p in range(1, cfg.n_layers + 1):
+        if cfg.n_layers % p == 0 and all(
+            cfg.layers[i] == cfg.layers[i % p] for i in range(cfg.n_layers)
+        ):
+            return p
+    return cfg.n_layers
+
+
+def stack_params_for_scan(params_list, period: int):
+    """[per-layer params] -> list of `period` trees with leaves stacked over
+    the n_layers/period repeats (leading scan axis)."""
+    import jax
+
+    n = len(params_list)
+    reps = n // period
+    out = []
+    for j in range(period):
+        group = [params_list[i * period + j] for i in range(reps)]
+        out.append(jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *group))
+    return out
+
+
+def _maybe_remat(ctx: TPContext, fn):
+    import jax
+
+    return jax.checkpoint(fn) if ctx.remat else fn
+
+
+def apply_stack(ctx, cfg, params_list, x, *, pos, caches=None, decode=False):
+    if ctx.scan_layers and scan_period(cfg) < cfg.n_layers:
+        return _apply_stack_scanned(ctx, cfg, params_list, x, pos=pos,
+                                    caches=caches, decode=decode)
+    aux_total: Dict[str, jnp.ndarray] = {}
+    new_caches: List[Any] = []
+    for i, spec in enumerate(cfg.layers):
+        c = caches[i] if caches is not None else None
+
+        def layer_fn(params_i, x, c, i=i, spec=spec):
+            return apply_layer(ctx, cfg, spec, params_i, x,
+                               pos=pos, cache=c, decode=decode)
+
+        x, c, aux = _maybe_remat(ctx, layer_fn)(params_list[i], x, c)
+        new_caches.append(c)
+        for k, v in aux.items():
+            aux_total[k] = aux_total.get(k, 0.0) + v
+    return x, (new_caches if caches is not None else None), aux_total
+
+
+def _apply_stack_scanned(ctx, cfg, params_list, x, *, pos, caches, decode):
+    import jax
+
+    period = scan_period(cfg)
+    reps = cfg.n_layers // period
+    stacked = stack_params_for_scan(list(params_list), period)
+    if caches is not None:
+        stacked_caches = stack_params_for_scan(list(caches), period)
+    else:
+        stacked_caches = [None] * period
+
+    aux_keys = ("load_balance", "router_z") if cfg.n_experts else ()
+
+    def body(carry, xs):
+        period_params, period_caches = xs
+
+        def one_rep(x, period_caches):
+            new_cs = []
+            aux_acc = {k: jnp.zeros((), jnp.float32) for k in aux_keys}
+            for j, spec in enumerate(cfg.layers[:period]):
+                c = period_caches[j] if caches is not None else None
+                x, c, aux = apply_layer(ctx, cfg, spec, period_params[j], x,
+                                        pos=pos, cache=c, decode=decode)
+                new_cs.append(c)
+                for k, v in aux.items():
+                    if k in aux_acc:
+                        aux_acc[k] = aux_acc[k] + v
+            return x, tuple(new_cs), aux_acc
+
+        x, new_cs, aux_acc = _maybe_remat(ctx, one_rep)(carry, period_caches)
+        new_c = new_cs if caches is not None else None
+        return x, (new_c, aux_acc)
+
+    xs = (stacked, stacked_caches)
+    x, (scanned_caches, aux_stacked) = jax.lax.scan(body, x, xs)
+    aux_total = {k: jnp.sum(v) for k, v in aux_stacked.items()}
+
+    new_caches = None
+    if caches is not None:
+        # unstack (reps, ...) x period back into per-layer order
+        new_caches = []
+        for i in range(reps):
+            for j in range(period):
+                new_caches.append(
+                    jax.tree.map(lambda t: t[i], scanned_caches[j])
+                )
+    return x, new_caches, aux_total
+
+
+def stack_specs(cfg: ModelConfig, ctx: TPContext):
+    return [layer_specs(cfg, spec, ctx) for spec in cfg.layers]

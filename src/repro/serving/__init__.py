@@ -1,0 +1,8 @@
+from repro.serving.engine import Engine, Request
+from repro.serving.kv_cache import cache_bytes, cache_specs
+from repro.serving.ttft import HARDWARE, Hardware, ttft_breakdown, ttft_seconds
+
+__all__ = [
+    "Engine", "Request", "cache_bytes", "cache_specs",
+    "HARDWARE", "Hardware", "ttft_breakdown", "ttft_seconds",
+]

@@ -1,0 +1,125 @@
+"""Serving engine: jit-compiled prefill/decode steps, batched request
+scheduling, greedy/temperature sampling, and TTFT instrumentation.
+
+This is the deployment surface the paper profiles: prefill is where the
+compressed TP collectives pay off; decode is policy-gated to uncompressed
+(paper §5.2/A100 finding: codec overhead loses when payloads are small).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tp import TPContext
+from repro.models.model import Model
+from repro.serving.kv_cache import cache_specs
+
+__all__ = ["Request", "Engine"]
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray            # int32 token ids
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    # filled by the engine:
+    output: Optional[np.ndarray] = None
+    ttft_s: Optional[float] = None
+    latency_s: Optional[float] = None
+
+
+class Engine:
+    """Static-batch serving engine (batch size fixed at construction; real
+    deployments would add continuous batching on top — see DESIGN.md)."""
+
+    def __init__(self, model: Model, params, ctx: TPContext, *,
+                 batch_size: int, max_len: int, cache_dtype=jnp.bfloat16,
+                 donate_cache: bool = True):
+        self.model = model
+        self.ctx = ctx
+        self.params = params
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+
+        def prefill(params, batch, cache):
+            return model.prefill(ctx, params, batch, cache)
+
+        def decode(params, tokens, cache):
+            return model.decode_step(ctx, params, tokens, cache)
+
+        donate = (2,) if donate_cache else ()
+        self._prefill = jax.jit(prefill, donate_argnums=donate)
+        self._decode = jax.jit(decode, donate_argnums=donate)
+
+    def _sample(self, logits: jnp.ndarray, temperature: float, key) -> jnp.ndarray:
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+    def run(self, requests: List[Request], *, extra_inputs: Optional[Dict] = None,
+            seed: int = 0) -> List[Request]:
+        """Serve a batch of requests (padded to equal prompt length)."""
+        assert len(requests) <= self.batch_size
+        B = self.batch_size
+        plen = max(len(r.prompt) for r in requests)
+        prompts = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(requests):
+            prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
+
+        cache = self.model.init_cache(B, self.max_len, self.cache_dtype)
+        batch = {"tokens": jnp.asarray(prompts)}
+        if extra_inputs:
+            batch.update(extra_inputs)
+
+        key = jax.random.PRNGKey(seed)
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, batch, cache)
+        logits.block_until_ready()
+        ttft = time.perf_counter() - t0
+
+        max_new = max(r.max_new_tokens for r in requests)
+        temp = max(r.temperature for r in requests)
+        outs = []
+        tok = self._sample(logits, temp, key)
+        outs.append(np.asarray(tok))
+        for step in range(max_new - 1):
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, tok[:, None], cache)
+            tok = self._sample(logits, temp, sub)
+            outs.append(np.asarray(tok))
+        jax.block_until_ready(tok)
+        total = time.perf_counter() - t0
+
+        out_arr = np.stack(outs, axis=1)  # (B, max_new)
+        for i, r in enumerate(requests):
+            r.output = out_arr[i, : r.max_new_tokens]
+            r.ttft_s = ttft
+            r.latency_s = total
+        return requests
+
+    def measure_ttft(self, prompt_len: int, *, iters: int = 8,
+                     extra_inputs: Optional[Dict] = None) -> Dict[str, float]:
+        """Median TTFT of a full-batch prefill (the paper's Table 3 metric)."""
+        B = self.batch_size
+        prompts = np.random.default_rng(0).integers(
+            0, self.model.cfg.vocab_size, (B, prompt_len), dtype=np.int64
+        ).astype(np.int32)
+        batch = {"tokens": jnp.asarray(prompts)}
+        if extra_inputs:
+            batch.update(extra_inputs)
+        times = []
+        for _ in range(iters):
+            cache = self.model.init_cache(B, self.max_len, self.cache_dtype)
+            t0 = time.perf_counter()
+            logits, cache = self._prefill(self.params, batch, cache)
+            logits.block_until_ready()
+            times.append(time.perf_counter() - t0)
+        times = np.array(times[1:])  # drop compile
+        return {"median_s": float(np.median(times)), "std_s": float(np.std(times)),
+                "iters": len(times)}

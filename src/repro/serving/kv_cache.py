@@ -1,0 +1,83 @@
+"""KV-cache utilities: sizing, sharding specs, and the windowed ring-buffer
+variant (a §Perf optimization: sliding-window layers allocate only
+window-sized caches instead of full-sequence ones)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.core.tp import TPContext
+from repro.models.attention import KVCache
+from repro.models.ssm import MambaCache
+from repro.models.xlstm import MLSTMCache, SLSTMCache
+
+__all__ = ["cache_bytes", "cache_specs", "layer_cache_len", "ring_positions"]
+
+
+def layer_cache_len(spec: LayerSpec, max_len: int, *, ring: bool = False) -> int:
+    """Cache length for a layer: full, or window-sized when ring buffers are
+    enabled for sliding-window layers."""
+    if ring and spec.window is not None:
+        return min(spec.window, max_len)
+    return max_len
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, max_len: int, *,
+                dtype_bytes: int = 2, ring: bool = False) -> int:
+    total = 0
+    for spec in cfg.layers:
+        if spec.kind == "attn":
+            L = layer_cache_len(spec, max_len, ring=ring)
+            total += 2 * batch * L * cfg.n_kv_heads * cfg.head_dim * dtype_bytes
+        elif spec.kind == "mamba":
+            total += batch * (cfg.ssm_d_conv - 1) * cfg.ssm_d_inner * 4
+            total += batch * cfg.ssm_d_inner * cfg.ssm_d_state * 4
+        elif spec.kind == "mlstm":
+            di = int(cfg.xlstm_proj_factor * cfg.d_model)
+            dh = di // cfg.n_heads
+            total += batch * cfg.n_heads * (dh * dh + dh + 1) * 4
+            total += batch * (cfg.xlstm_conv - 1) * di * 4
+        elif spec.kind == "slstm":
+            total += 4 * batch * cfg.d_model * 4
+    if cfg.encoder_decoder:
+        total += 2 * cfg.n_layers * batch * cfg.encoder_seq * cfg.kv_dim * dtype_bytes
+    return total
+
+
+def _one_cache_spec(ctx: TPContext, cache) -> object:
+    a = ctx.axis if ctx.tp else None
+    b = ctx.batch
+    s = ctx.seq_axis
+    if isinstance(cache, KVCache):
+        # flat (B, S, kv_dim) layout: kv_dim over model (divisible for every
+        # assigned arch), batch over data, seq over data for batch=1 shapes
+        spec = P(b, s, a)
+        return KVCache(k=spec, v=spec)
+    if isinstance(cache, MambaCache):
+        return MambaCache(conv=P(b, None, a), ssm=P(b, a, None))
+    if isinstance(cache, MLSTMCache):
+        return MLSTMCache(C=P(b, None, None, None), n=P(b, None, None),
+                          m=P(b, None), conv=P(b, None, a))
+    if isinstance(cache, SLSTMCache):
+        return SLSTMCache(*(P(b, None, None) for _ in range(4)))
+    raise TypeError(type(cache))
+
+
+def cache_specs(ctx: TPContext, cache: dict) -> dict:
+    """PartitionSpec pytree matching Model.init_cache output."""
+    out = {"layers": [_one_cache_spec(ctx, c) for c in cache["layers"]],
+           "pos": P()}
+    if "cross" in cache:
+        a = ctx.axis if ctx.tp else None
+        out["cross"] = [KVCache(k=P(ctx.batch, None, a), v=P(ctx.batch, None, a))
+                        for _ in cache["cross"]]
+    return out
+
+
+def ring_positions(pos: jnp.ndarray, window: int) -> jnp.ndarray:
+    """Write index into a window-sized ring buffer."""
+    return jnp.mod(pos, window)

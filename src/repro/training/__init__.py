@@ -1,0 +1,11 @@
+from repro.training.optimizer import AdamWConfig, adamw_update, cosine_lr, init_opt_state
+from repro.training.train_step import (
+    batch_sharding, init_train_state, make_train_step, train_state_specs,
+)
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+
+__all__ = [
+    "AdamWConfig", "adamw_update", "cosine_lr", "init_opt_state",
+    "make_train_step", "init_train_state", "train_state_specs", "batch_sharding",
+    "save_checkpoint", "restore_checkpoint",
+]

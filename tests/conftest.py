@@ -1,0 +1,26 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device; multi-device collective tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def fp32_reduced(arch: str, **kw):
+    """Reduced config in float32 (tight numeric tolerances)."""
+    from repro.configs import get_config, reduced_config
+
+    cfg = reduced_config(get_config(arch), **kw)
+    return dataclasses.replace(cfg, dtype="float32")

@@ -1,0 +1,98 @@
+"""Serving engine + data pipeline behaviour."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tp import TPContext
+from repro.data import Batches, ByteTokenizer, corpus_tokens
+from repro.models.frontends import audio_frames_stub, patch_embed_stub
+from repro.models.model import Model
+from repro.serving import Engine, Request, cache_bytes
+from tests.conftest import fp32_reduced
+
+CTX = TPContext(mesh=None)
+
+
+def test_engine_batched_requests():
+    cfg = fp32_reduced("internlm2-1.8b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    engine = Engine(model, params, CTX, batch_size=4, max_len=64)
+    reqs = [Request(prompt=np.arange(5 + i, dtype=np.int32) % cfg.vocab_size,
+                    max_new_tokens=6) for i in range(4)]
+    out = engine.run(reqs)
+    for r in out:
+        assert r.output.shape == (6,)
+        assert r.ttft_s > 0 and r.latency_s >= r.ttft_s
+
+
+def test_engine_greedy_deterministic():
+    cfg = fp32_reduced("internlm2-1.8b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    engine = Engine(model, params, CTX, batch_size=2, max_len=48)
+    reqs = lambda: [Request(prompt=np.arange(8, dtype=np.int32), max_new_tokens=5)
+                    for _ in range(2)]
+    a = engine.run(reqs())[0].output
+    b = engine.run(reqs())[0].output
+    np.testing.assert_array_equal(a, b)
+
+
+def test_engine_vlm_and_audio_frontends():
+    for arch in ["pixtral-12b", "whisper-medium"]:
+        cfg = fp32_reduced(arch)
+        model = Model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        extra = {}
+        if cfg.frontend == "vision":
+            extra["patch_embeds"] = patch_embed_stub(cfg, 2, jax.random.PRNGKey(1),
+                                                     jnp.float32)
+        if cfg.encoder_decoder:
+            extra["encoder_frames"] = audio_frames_stub(cfg, 2, jax.random.PRNGKey(2),
+                                                        jnp.float32)
+        engine = Engine(model, params, CTX, batch_size=2,
+                        max_len=64 + cfg.n_patches, cache_dtype=jnp.float32)
+        reqs = [Request(prompt=np.arange(6, dtype=np.int32), max_new_tokens=3)
+                for _ in range(2)]
+        out = engine.run(reqs, extra_inputs=extra)
+        assert out[0].output.shape == (3,), arch
+
+
+def test_measure_ttft():
+    cfg = fp32_reduced("internlm2-1.8b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    engine = Engine(model, params, CTX, batch_size=2, max_len=40)
+    stats = engine.measure_ttft(16, iters=3)
+    assert stats["median_s"] > 0
+
+
+def test_byte_tokenizer_roundtrip():
+    tok = ByteTokenizer()
+    s = "def f(x):\n    return x  # ünïcode"
+    ids = tok.encode(s)
+    assert tok.decode(ids) == s
+
+
+def test_corpus_and_batches():
+    toks = corpus_tokens(50_000)
+    assert len(toks) == 50_000
+    assert toks.min() >= 0 and toks.max() < 256
+    b = Batches(toks, 4, 32, seed=1)
+    batch = b.next()
+    assert batch["tokens"].shape == (4, 32)
+    # next-token alignment
+    np.testing.assert_array_equal(np.asarray(batch["tokens"][:, 1:]),
+                                  np.asarray(batch["targets"][:, :-1]))
+
+
+def test_cache_bytes_accounting():
+    from repro.configs import get_config
+
+    cfg = get_config("gemma3-4b")
+    full = cache_bytes(cfg, batch=1, max_len=32768)
+    ring = cache_bytes(cfg, batch=1, max_len=32768, ring=True)
+    assert ring < full * 0.25  # 29/34 layers shrink to window 1024

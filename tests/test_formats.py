@@ -1,0 +1,80 @@
+"""Element/scale format facts asserted against the OCP MX spec and the
+paper's tables."""
+import numpy as np
+import pytest
+
+from repro.core.formats import (
+    ELEMENT_FORMATS, MXSpec, SCALE_FORMATS, PAPER_BLOCK_SIZES,
+    PAPER_VALUE_DTYPES, spec_grid,
+)
+
+
+def test_fp4_e2m1_is_ocp_grid():
+    f = ELEMENT_FORMATS["fp4_e2m1"]
+    expect = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+    pos = [v for v in f.code_values if v >= 0]
+    assert pos == expect
+    assert f.max_value == 6.0
+    assert f.emax == 2
+
+
+def test_fp5_e2m2_max():
+    assert ELEMENT_FORMATS["fp5_e2m2"].max_value == 7.0
+
+
+def test_no_inf_nan_codes():
+    for name, f in ELEMENT_FORMATS.items():
+        assert np.isfinite(f.code_values).all(), name
+
+
+@pytest.mark.parametrize("fp,int_,scale_ratio", [
+    ("fp3_e1m1", "int3", 1.0),
+    ("fp4_e1m2", "int4", 2.0),
+    ("fp5_e1m3", "int5", 4.0),
+])
+def test_e1mm_equals_int_grid(fp, int_, scale_ratio):
+    """Paper Table 5: E1Mm and INT(m+2) give identical perplexity — because
+    the grids coincide up to a power-of-two scale (theorem, not coincidence)."""
+    a = ELEMENT_FORMATS[fp].code_values
+    b = ELEMENT_FORMATS[int_].code_values
+    np.testing.assert_allclose(a * scale_ratio, b)
+
+
+@pytest.mark.parametrize("v,b,s,expect", [
+    ("fp4_e2m1", 32, "e8m0", 4.25),   # Table 3 profiling config
+    ("fp4_e2m1", 8, "e5m0", 4.625),   # Table 1 "4.6"
+    ("fp4_e2m1", 16, "e5m0", 4.3125),  # Table 1 "4.3"
+    ("fp3_e1m1", 16, "e5m0", 3.3125),  # Table 1 "3.3"
+    ("fp5_e2m2", 32, "e5m0", 5.15625),  # Table 2 "5.2"
+    ("fp5_e2m2", 8, "e5m0", 5.625),   # Table 1 "5.6"
+])
+def test_effective_bits_match_paper(v, b, s, expect):
+    assert MXSpec.make(v, b, s).effective_bits == expect
+
+
+def test_compression_ratio_range():
+    """Abstract claims 3.5-4.5x for the chosen low-bit schemes."""
+    r = MXSpec.make("fp4_e2m1", 32, "e8m0").compression_ratio()
+    assert 3.5 <= r <= 4.0
+    r8 = MXSpec.make("fp4_e2m1", 8, "e5m0").compression_ratio()
+    assert 3.0 <= r8 <= 3.6
+
+
+def test_scale_formats():
+    s = SCALE_FORMATS["e8m0"]
+    assert s.bias == 127 and s.min_exp == -127 and s.max_exp == 127
+    s5 = SCALE_FORMATS["e5m0"]
+    assert s5.bias == 15 and s5.max_exp == 16
+
+
+def test_wire_bytes():
+    spec = MXSpec.make("fp4_e2m1", 32, "e8m0")
+    # 64 values: 32 bytes codes + 2 scale bytes
+    assert spec.wire_bytes(64) == 34
+    spec5 = MXSpec.make("fp5_e2m2", 32, "e8m0")
+    assert spec5.wire_bytes(64) == 40 + 2
+
+
+def test_grid_size():
+    grid = list(spec_grid(PAPER_VALUE_DTYPES, PAPER_BLOCK_SIZES, ("e8m0",)))
+    assert len(grid) == 27

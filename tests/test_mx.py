@@ -1,0 +1,103 @@
+"""Property + spec tests for the MX block quantizer (the paper's codec)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mx
+from repro.core.formats import MXSpec
+
+SPECS = [
+    MXSpec.make("fp4_e2m1", 32, "e8m0"),
+    MXSpec.make("fp5_e2m2", 16, "e8m0"),
+    MXSpec.make("fp3_e1m1", 8, "e8m0"),
+    MXSpec.make("int4", 32, "e5m0"),
+]
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    spec=st.sampled_from(SPECS),
+    log_scale=st.floats(-8, 8),
+)
+@settings(max_examples=60, deadline=None)
+def test_wire_equals_fake_quantize(seed, spec, log_scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, 4 * spec.block_size)) * 10**log_scale,
+                    jnp.float32)
+    via_wire = mx.dequantize(mx.quantize(x, spec), spec)
+    direct = mx.fake_quantize(x, spec)
+    np.testing.assert_allclose(np.asarray(via_wire), np.asarray(direct))
+
+
+@given(seed=st.integers(0, 2**31 - 1), spec=st.sampled_from(SPECS))
+@settings(max_examples=40, deadline=None)
+def test_idempotent(seed, spec):
+    """Quantizing already-quantized values is exact (grid points are fixed)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, 4 * spec.block_size)), jnp.float32)
+    q1 = mx.fake_quantize(x, spec)
+    q2 = mx.fake_quantize(q1, spec)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2))
+
+
+@given(seed=st.integers(0, 2**31 - 1), spec=st.sampled_from(SPECS))
+@settings(max_examples=40, deadline=None)
+def test_error_bound(seed, spec):
+    """|x - q(x)| <= half the largest grid gap x the block scale (plus the
+    saturation case bounded by amax's own block)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(8, spec.block_size)), jnp.float32)
+    q = mx.fake_quantize(x, spec)
+    blocks = np.asarray(x).reshape(8, -1, spec.block_size)
+    amax = np.abs(blocks).max(-1)
+    e = np.clip(np.floor(np.log2(np.maximum(amax, 1e-30))) - spec.elem.emax,
+                spec.scale.min_exp, spec.scale.max_exp)
+    scale = (2.0**e)[..., None]
+    gaps = np.diff(spec.elem.code_values).max()
+    bound = (gaps / 2) * scale + 1e-7
+    err = np.abs(np.asarray(q).reshape(blocks.shape) - blocks)
+    # non-saturated values obey the mid-point bound
+    saturated = np.abs(blocks / scale) > spec.elem.max_value
+    assert (err[~saturated] <= np.broadcast_to(bound, err.shape)[~saturated]).all()
+
+
+def test_zero_block():
+    spec = MXSpec.make("fp4_e2m1", 32, "e8m0")
+    x = jnp.zeros((2, 64), jnp.float32)
+    comp = mx.quantize(x, spec)
+    out = mx.dequantize(comp, spec)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_exact_powers_of_two():
+    """floor_log2 via exponent bitcast: exact at powers of two (a log2()
+    rounding would be off-by-one here)."""
+    spec = MXSpec.make("fp4_e2m1", 8, "e8m0")
+    for v in [2.0**k for k in range(-10, 11)]:
+        x = jnp.full((1, 8), v, jnp.float32)
+        q = mx.fake_quantize(x, spec)
+        np.testing.assert_allclose(np.asarray(q), v)  # powers of 2 representable
+
+
+def test_quality_ordering_matches_paper():
+    """Table 1 orderings: FP5 < FP4 < FP3 error; block 8 <= 16 <= 32 error."""
+    rng = np.random.default_rng(1)
+    # outlier-heavy activations (Dettmers'22): gaussian + sparse large spikes
+    x = rng.normal(size=(64, 2048))
+    mask = rng.random(x.shape) < 0.01
+    x = x + mask * rng.normal(size=x.shape) * 30
+    x = jnp.asarray(x, jnp.float32)
+
+    def err(v, b):
+        return float(mx.quantization_error(x, MXSpec.make(v, b))["rel_l2"])
+
+    assert err("fp5_e2m2", 32) < err("fp4_e2m1", 32) < err("fp3_e1m1", 32)
+    assert err("fp4_e2m1", 8) <= err("fp4_e2m1", 16) <= err("fp4_e2m1", 32)
+
+
+def test_scale_clamp_extremes():
+    spec = MXSpec.make("fp4_e2m1", 8, "e4m0")  # tiny scale range
+    x = jnp.asarray([[1e30, 1e30, -1e30, 0.0] * 2], jnp.float32)
+    out = mx.dequantize(mx.quantize(x, spec), spec)
+    assert np.isfinite(np.asarray(out)).all()

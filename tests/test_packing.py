@@ -1,0 +1,39 @@
+"""Property tests: n-bit packing round-trips exactly for every width."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.packing import pack_codes, packed_bytes, unpack_codes
+
+
+@given(
+    bits=st.sampled_from([2, 3, 4, 5, 8]),
+    groups=st.integers(1, 16),
+    lead=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=60, deadline=None)
+def test_roundtrip(bits, groups, lead, seed):
+    rng = np.random.default_rng(seed)
+    k = groups * 8
+    codes = jnp.asarray(rng.integers(0, 2**bits, size=(lead, k)), jnp.uint8)
+    packed = pack_codes(codes, bits)
+    assert packed.shape == (lead, packed_bytes(k, bits))
+    out = unpack_codes(packed, bits, k)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+
+def test_density():
+    """Packed size is exactly bits/8 bytes per code (the compression claim)."""
+    codes = jnp.zeros((128,), jnp.uint8)
+    for bits in (2, 3, 4, 5, 8):
+        assert pack_codes(codes, bits).shape[-1] == 128 * bits // 8
+
+
+def test_nibble_layout():
+    """4-bit fast path: low nibble = even index, high nibble = odd index."""
+    codes = jnp.asarray([1, 2, 3, 4, 5, 6, 7, 8], jnp.uint8)
+    packed = np.asarray(pack_codes(codes, 4))
+    assert packed[0] == 1 | (2 << 4)
+    assert packed[3] == 7 | (8 << 4)

@@ -1,0 +1,82 @@
+"""Training substrate: optimizer math, learning on a tiny task, checkpoints."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tp import TPContext
+from repro.data import Batches, corpus_tokens
+from repro.models.model import Model
+from repro.training import (
+    AdamWConfig, cosine_lr, init_train_state, make_train_step,
+    restore_checkpoint, save_checkpoint,
+)
+from tests.conftest import fp32_reduced
+
+CTX = TPContext(mesh=None)
+
+
+def test_cosine_schedule():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110, min_lr_frac=0.1)
+    assert float(cosine_lr(cfg, jnp.int32(0))) == 0.0
+    assert float(cosine_lr(cfg, jnp.int32(10))) == pytest.approx(1.0)
+    assert float(cosine_lr(cfg, jnp.int32(110))) == pytest.approx(0.1)
+    assert float(cosine_lr(cfg, jnp.int32(60))) == pytest.approx(0.55, abs=0.02)
+
+
+def test_loss_decreases_on_corpus():
+    cfg = dataclasses.replace(fp32_reduced("internlm2-1.8b"), vocab_size=258)
+    model = Model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    opt = AdamWConfig(lr=2e-3, warmup_steps=5, total_steps=60)
+    step = jax.jit(make_train_step(model, CTX, opt))
+    batches = Batches(corpus_tokens(100_000), 8, 64, seed=0)
+    losses = []
+    for _ in range(25):
+        state, m = step(state, batches.next())
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.8, losses[::6]
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_grad_clip_bounds_update():
+    from repro.training.optimizer import adamw_update, init_opt_state
+
+    params = {"w": jnp.ones((4, 4))}
+    grads = {"w": jnp.full((4, 4), 1e6)}
+    cfg = AdamWConfig(lr=1e-2, clip_norm=1.0, warmup_steps=0, total_steps=10)
+    new, st, metrics = adamw_update(cfg, params, grads, init_opt_state(params))
+    assert float(metrics["grad_norm"]) > 1e5
+    assert bool(jnp.isfinite(new["w"]).all())
+    assert float(jnp.abs(new["w"] - params["w"]).max()) < 1.0
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = fp32_reduced("qwen2-7b")
+    model = Model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, state["params"], step=3)
+    restored = restore_checkpoint(path, state["params"])
+    for a, b in zip(jax.tree.leaves(state["params"]), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_param_specs_tree_matches_params():
+    """Every arch: the PartitionSpec tree must match the param tree exactly
+    (a mismatch breaks the dry-run's in_shardings)."""
+    from repro.configs import ASSIGNED, get_config, reduced_config
+
+    for arch in ASSIGNED:
+        cfg = reduced_config(get_config(arch))
+        model = Model(cfg)
+        params = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+        specs = model.param_specs(TPContext(mesh=None))
+        s1 = jax.tree_util.tree_structure(
+            params, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        import jax.sharding as shd
+        s2 = jax.tree_util.tree_structure(
+            specs, is_leaf=lambda x: isinstance(x, shd.PartitionSpec))
+        assert s1 == s2, f"{arch}: spec tree != param tree"

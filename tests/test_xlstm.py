@@ -1,0 +1,102 @@
+"""Chunkwise mLSTM vs a step-by-step recurrent oracle, sLSTM invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.xlstm import _mlstm_chunk
+
+
+def mlstm_recurrent_oracle(q, k, v, li, lf):
+    """Direct per-step recurrence (log-space stabilized), (B,H,S,dh)."""
+    B, H, S, dh = q.shape
+    C = np.zeros((B, H, dh, dh))
+    n = np.zeros((B, H, dh))
+    m = np.full((B, H), -1e30)
+    hs = np.zeros((B, H, S, dh))
+    for t in range(S):
+        m_new = np.maximum(lf[..., t] + m, li[..., t])
+        fp = np.exp(lf[..., t] + m - m_new)
+        ip = np.exp(li[..., t] - m_new)
+        C = fp[..., None, None] * C + ip[..., None, None] * (
+            k[..., t, :, None] * v[..., t, None, :])
+        n = fp[..., None] * n + ip[..., None] * k[..., t, :]
+        m = m_new
+        num = np.einsum("bhd,bhde->bhe", q[..., t, :], C)
+        den = np.maximum(np.abs(np.einsum("bhd,bhd->bh", q[..., t, :], n)),
+                         np.exp(-m))
+        hs[..., t, :] = num / den[..., None]
+    return hs, (C, n, m)
+
+
+@pytest.mark.parametrize("chunks", [1, 2, 4])
+def test_chunkwise_matches_recurrent(chunks):
+    rng = np.random.default_rng(0)
+    B, H, S, dh = 2, 3, 16, 8
+    q = rng.normal(size=(B, H, S, dh)) * 0.5
+    k = rng.normal(size=(B, H, S, dh)) * 0.5
+    v = rng.normal(size=(B, H, S, dh))
+    li = rng.normal(size=(B, H, S))
+    lf = np.log(1 / (1 + np.exp(-rng.normal(size=(B, H, S)) - 2)))  # logsigmoid
+
+    want, (C_w, n_w, m_w) = mlstm_recurrent_oracle(q, k, v, li, lf)
+
+    L = S // chunks
+    carry = (jnp.zeros((B, H, dh, dh)), jnp.zeros((B, H, dh)),
+             jnp.full((B, H), -1e30))
+    outs = []
+    for c in range(chunks):
+        sl = slice(c * L, (c + 1) * L)
+        carry, h = _mlstm_chunk(carry, tuple(
+            jnp.asarray(t[..., sl, :] if t.ndim == 4 else t[..., sl])
+            for t in (q, k, v, li, lf)))
+        outs.append(np.asarray(h))
+    got = np.concatenate(outs, axis=2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(carry[0]), C_w, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(carry[2]), m_w, rtol=1e-4, atol=1e-5)
+
+
+def test_mlstm_block_decode_matches_prefill():
+    """Running the block step-by-step with cache == one prefill pass."""
+    from repro.core.tp import TPContext
+    from repro.models.xlstm import init_mlstm, init_mlstm_cache, mlstm
+    from tests.conftest import fp32_reduced
+    from repro.models.common import Initializer
+
+    cfg = fp32_reduced("xlstm-125m")
+    ctx = TPContext(mesh=None)
+    init = Initializer(jax.random.PRNGKey(0), jnp.float32)
+    params = init_mlstm(init, "m", cfg)
+    B, S = 2, 8
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.5
+
+    cache = init_mlstm_cache(cfg, B)
+    full, _ = mlstm(ctx, params, x, cfg, cache=cache)
+
+    cache = init_mlstm_cache(cfg, B)
+    steps = []
+    for t in range(S):
+        out, cache = mlstm(ctx, params, x[:, t:t + 1], cfg, cache=cache,
+                           decode=True)
+        steps.append(np.asarray(out))
+    got = np.concatenate(steps, axis=1)
+    np.testing.assert_allclose(got, np.asarray(full), rtol=5e-3, atol=5e-4)
+
+
+def test_slstm_stability_long_sequence():
+    """Exponential gating with stabilizer stays finite over long scans."""
+    from repro.core.tp import TPContext
+    from repro.models.xlstm import init_slstm, slstm
+    from tests.conftest import fp32_reduced
+    from repro.models.common import Initializer
+
+    cfg = fp32_reduced("xlstm-125m")
+    ctx = TPContext(mesh=None)
+    init = Initializer(jax.random.PRNGKey(0), jnp.float32)
+    params = init_slstm(init, "s", cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 256, cfg.d_model)) * 3.0
+    out, _ = slstm(ctx, params, x, cfg)
+    assert bool(jnp.isfinite(out).all())
