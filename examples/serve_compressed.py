@@ -1,5 +1,6 @@
-"""Serve a small trained model with batched requests, comparing TTFT and
-output quality with and without compressed TP communication.
+"""Serve a small trained model through the continuous-batching engine,
+comparing TTFT and output quality with and without compressed TP
+communication under staggered request arrivals.
 
   PYTHONPATH=src python examples/serve_compressed.py
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -55,12 +56,18 @@ def main():
                                             variant="two_phase")),
     ]:
         ctx = make_context(mesh, None, policy=policy)
-        engine = Engine(model, state["params"], ctx, batch_size=4, max_len=192)
-        reqs = [Request(prompt=prompt, max_new_tokens=48) for _ in range(4)]
+        engine = Engine(model, state["params"], ctx, max_slots=4, max_len=192)
+        engine.run([Request(prompt=prompt, max_new_tokens=2)])  # compile warmup
+        # staggered arrivals: requests trickle in while earlier ones decode
+        reqs = [Request(prompt=prompt, max_new_tokens=48, arrival_s=0.02 * i)
+                for i in range(4)]
         out = engine.run(reqs)
         text = tok.decode(out[0].output)
         stats = engine.measure_ttft(len(prompt), iters=4)
-        print(f"\n--- {name}: TTFT {stats['median_s']*1e3:.1f} ms")
+        s = engine.stats.summary()
+        print(f"\n--- {name}: prefill TTFT {stats['median_s']*1e3:.1f} ms, "
+              f"served TTFT p50 {s['ttft_p50_s']*1e3:.1f} ms, "
+              f"{s['tokens_per_s']:.1f} tok/s")
         print(f"completion: {text!r}")
 
 

@@ -1,0 +1,98 @@
+"""Version-robust wrappers over JAX APIs that moved between releases.
+
+The repo targets the mesh/shard_map surface of recent JAX (``jax.set_mesh``,
+``jax.shard_map`` with ``axis_names``/``check_vma``), but must also run on
+0.4.x where those live under different names and signatures:
+
+  * ``jax.set_mesh``    -> ``jax.sharding.use_mesh`` -> ``Mesh`` context
+                           manager -> no-op context (NamedSharding-under-jit
+                           programs don't need an ambient mesh at all)
+  * ``jax.make_mesh``   -> ``mesh_utils.create_device_mesh`` + ``Mesh``
+  * ``jax.shard_map``   -> ``jax.experimental.shard_map.shard_map`` with
+                           ``axis_names`` translated to its complement
+                           ``auto=`` set and ``check_vma`` -> ``check_rep``
+
+Everything here is resolved at call time, so importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["set_mesh", "make_mesh", "shard_map"]
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """``jax.make_mesh`` with a device-mesh fallback for older releases."""
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes)
+    from jax.experimental import mesh_utils
+
+    return Mesh(mesh_utils.create_device_mesh(shape), axes)
+
+
+def set_mesh(mesh: Optional[Mesh]):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    Falls back through the historical spellings; the final fallback is a
+    plain nullcontext, which suffices whenever all jit inputs/outputs carry
+    explicit NamedShardings (the only way this repo uses meshes).
+    """
+    if mesh is None:
+        return contextlib.nullcontext(None)
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    if isinstance(mesh, Mesh):
+        # 0.4.x: Mesh is itself a context manager installing the ambient mesh
+        return mesh
+    return contextlib.nullcontext(mesh)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """``jax.shard_map`` signature on every supported JAX.
+
+    ``axis_names`` is the set of mesh axes the body is manual over (the new
+    API's vocabulary); on 0.4.x it is translated to the experimental
+    shard_map's ``auto=`` complement. ``check_vma`` maps to ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {"check_vma": check_vma}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    auto = frozenset()
+    if axis_names is not None:
+        # 0.4.x partial-auto shard_map trips an SPMD-partitioner check
+        # (IsManualSubgroup mismatch) even for axes the body never touches.
+        # An axis that appears in no in/out spec is replicated either way, so
+        # promote it to manual and only keep genuinely-referenced axes auto.
+        auto = (frozenset(mesh.axis_names) - frozenset(axis_names)
+                ) & _spec_axes((in_specs, out_specs))
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)
+
+
+def _spec_axes(specs) -> frozenset:
+    """Mesh axis names referenced anywhere in a pytree of PartitionSpecs."""
+    from jax.sharding import PartitionSpec
+
+    axes = set()
+    for leaf in jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, PartitionSpec)):
+        if not isinstance(leaf, PartitionSpec):
+            continue
+        for entry in leaf:
+            if entry is None:
+                continue
+            axes.update(entry if isinstance(entry, tuple) else (entry,))
+    return frozenset(axes)

@@ -10,6 +10,7 @@ live in ``repro.core.tp``.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
@@ -229,7 +230,9 @@ def psum_maybe_compressed(
     activations rows crossing the wire) — the prefill/decode discriminator.
     """
     if n_tokens is None:
-        n_tokens = int(jnp.prod(jnp.asarray(partial.shape[:-1]))) if partial.ndim > 1 else 1
+        # static Python shape math: shapes are known at trace time, and the
+        # jnp round-trip would materialize a traced array inside jit
+        n_tokens = math.prod(partial.shape[:-1]) if partial.ndim > 1 else 1
     if policy is None or not policy.active_for(n_tokens):
         return lax.psum(partial, axis_name)
     return compressed_psum(

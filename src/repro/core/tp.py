@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.collectives import psum_maybe_compressed
 from repro.core.policy import CompressionPolicy, NO_COMPRESSION
 
@@ -200,7 +201,7 @@ def row_linear(
                                      axis_size=tp_size)
 
     mids = [None] * (x.ndim - 2)
-    y = jax.shard_map(
+    y = shard_map(
         island,
         mesh=ctx.mesh,
         in_specs=(P(b_entry, *mids, axis), P(axis, None)),
@@ -267,7 +268,7 @@ def fused_mlp(
     w_specs = (P(None, axis),) * (2 if has_gate else 1) + (P(axis, None),)
     args = ((w_gate, w_up, w_down) if has_gate else (w_up, w_down))
     mids = [None] * (x.ndim - 2)
-    return jax.shard_map(
+    return shard_map(
         island,
         mesh=ctx.mesh,
         in_specs=(P(b_entry, *mids, None), *w_specs),

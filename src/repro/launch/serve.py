@@ -1,7 +1,9 @@
-"""Serving driver: batched requests through the Engine with compressed TP.
+"""Serving driver: continuous-batching requests through the Engine with
+compressed TP (see DESIGN.md for the engine architecture).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
-      --batch 4 --prompt-len 64 --new-tokens 16 --policy mx
+      --slots 4 --requests 8 --prompt-len 64 --new-tokens 16 --policy mx \
+      --stagger 0.05
 """
 import argparse
 import time
@@ -24,12 +26,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-7b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="total requests (default: one per slot)")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--policy", default="mx", choices=["mx", "none"])
     ap.add_argument("--variant", default="gather", choices=["gather", "two_phase"])
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--stagger", type=float, default=0.0,
+                    help="inter-arrival gap in seconds (simulated traffic)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -47,31 +54,42 @@ def main():
     params = model.init_params(jax.random.PRNGKey(0))
     max_len = args.prompt_len + args.new_tokens + cfg.n_patches * (
         cfg.frontend == "vision")
-    engine = Engine(model, params, ctx, batch_size=args.batch, max_len=max_len)
+    engine = Engine(model, params, ctx, max_slots=args.slots, max_len=max_len,
+                    block_size=args.block_size)
 
+    n_req = args.requests or args.slots
     rng = np.random.default_rng(0)
     reqs = [
         Request(
             prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
             max_new_tokens=args.new_tokens,
             temperature=args.temperature,
+            arrival_s=i * args.stagger,
         )
-        for _ in range(args.batch)
+        for i in range(n_req)
     ]
     extra = {}
     if cfg.frontend == "vision":
-        extra["patch_embeds"] = patch_embed_stub(cfg, args.batch,
-                                                 jax.random.PRNGKey(1))
+        extra["patch_embeds"] = patch_embed_stub(cfg, n_req, jax.random.PRNGKey(1))
     if cfg.encoder_decoder:
-        extra["encoder_frames"] = audio_frames_stub(cfg, args.batch,
-                                                    jax.random.PRNGKey(2))
+        extra["encoder_frames"] = audio_frames_stub(cfg, n_req, jax.random.PRNGKey(2))
+    # warm up the prefill bucket + decode jits so the reported TTFT/latency
+    # measure serving, not XLA compilation
+    engine.run([Request(prompt=reqs[0].prompt.copy(), max_new_tokens=2)],
+               extra_inputs={k: v[:1] for k, v in extra.items()} or None)
     t0 = time.time()
     out = engine.run(reqs, extra_inputs=extra or None)
-    print(f"TTFT {out[0].ttft_s*1e3:.1f} ms, total {out[0].latency_s*1e3:.1f} ms "
-          f"for {args.new_tokens} tokens x {args.batch} requests "
-          f"(wall {time.time()-t0:.2f}s incl compile)")
-    stats = engine.measure_ttft(args.prompt_len, iters=4, extra_inputs=extra or None)
-    print(f"TTFT median {stats['median_s']*1e3:.2f} ms (std {stats['std_s']*1e3:.2f})")
+    wall = time.time() - t0
+    s = engine.stats.summary()
+    print(f"{s['n_requests']} requests, {s['n_generated']} tokens in "
+          f"{wall:.2f}s wall (incl compile); steady tokens/s={s['tokens_per_s']:.1f}")
+    print(f"TTFT p50 {s['ttft_p50_s']*1e3:.1f} ms, p90 {s['ttft_p90_s']*1e3:.1f} ms; "
+          f"latency p50 {s['latency_p50_s']*1e3:.1f} ms; "
+          f"preemptions={s['n_preemptions']}")
+    stats = engine.measure_ttft(args.prompt_len, iters=4,
+                                extra_inputs=extra or None)
+    print(f"prefill TTFT median {stats['median_s']*1e3:.2f} ms "
+          f"(std {stats['std_s']*1e3:.2f})")
     print("first request tokens:", out[0].output.tolist())
 
 

@@ -26,7 +26,8 @@ from repro.configs.base import ModelConfig
 from repro.core.tp import TPContext, column_linear, constrain, row_linear
 from repro.models.common import Initializer, apply_rope, init_linear, make_rope, rms_norm
 
-__all__ = ["init_attention", "KVCache", "init_cache", "attention", "attention_specs"]
+__all__ = ["init_attention", "KVCache", "init_cache", "attention",
+           "attention_specs", "paged_attention_decode"]
 
 NEG_INF = -1e30
 _Q_CHUNK = 1024
@@ -79,7 +80,10 @@ def _qkv(ctx: TPContext, params, x, cfg: ModelConfig, positions):
 
 
 def _attend_block(q, k, v, q_pos, t_pos, *, causal, window, scale, kv_heads):
-    """q (B,Sq,H,hd); k/v flat (B,T,kv_dim); positions 1-D. -> (B,Sq,H*hd)."""
+    """q (B,Sq,H,hd); k/v flat (B,T,kv_dim); t_pos (T,). -> (B,Sq,H*hd).
+
+    q_pos is (Sq,) when positions are shared across the batch, or (B,Sq)
+    for per-slot positions (continuous-batching decode)."""
     B, Sq, H, hd = q.shape
     T = k.shape[1]
     KV = kv_heads
@@ -89,12 +93,14 @@ def _attend_block(q, k, v, q_pos, t_pos, *, causal, window, scale, kv_heads):
     qg = q.reshape(B, Sq, KV, G, hd)
     scores = jnp.einsum("bsngd,btnd->bnsgt", qg, kh).astype(jnp.float32) * scale
     if causal:
-        valid = t_pos[None, :] <= q_pos[:, None]
+        valid = t_pos[None, :] <= q_pos[..., :, None]
     else:
-        valid = jnp.ones((Sq, T), bool) & (t_pos[None, :] >= 0)
+        valid = jnp.broadcast_to(t_pos >= 0, q_pos.shape + (T,))
     if window is not None:
-        valid = valid & (t_pos[None, :] > q_pos[:, None] - window)
-    scores = jnp.where(valid[None, None, :, None, :], scores, NEG_INF)
+        valid = valid & (t_pos[None, :] > q_pos[..., :, None] - window)
+    if valid.ndim == 2:
+        valid = valid[None]                        # (1 or B, Sq, T)
+    scores = jnp.where(valid[:, None, :, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     out = jnp.einsum("bnsgt,btnd->bsngd", probs, vh)
     return out.reshape(B, Sq, H * hd)
@@ -193,6 +199,58 @@ def attention(
     out = constrain(ctx, out, ctx.batch, None, a)
     y = row_linear(ctx, out, params["wo"]["w"], n_tokens=B * S)
     return y, cache
+
+
+def paged_attention_decode(
+    ctx: TPContext,
+    params,
+    x: jnp.ndarray,                    # (B, 1, d_model) — one token per slot
+    cfg: ModelConfig,
+    *,
+    lengths: jnp.ndarray,              # (B,) int32 per-slot write position
+    pool_k: jnp.ndarray,               # (n_blocks, block_size, kv_dim)
+    pool_v: jnp.ndarray,
+    tables: jnp.ndarray,               # (B, max_blocks) int32 block ids
+    window: Optional[int] = None,
+):
+    """One decode step against a paged KV cache (DESIGN.md §Paged cache).
+
+    Writes the new K/V at block ``tables[b, lengths[b] // bs]`` offset
+    ``lengths[b] % bs`` (a vectorized scatter), gathers each slot's logical
+    sequence via its block-table row, and attends with per-slot masks.
+    Inactive slots point at the null block; their writes and reads are
+    garbage but masked out by the engine. Returns (out, pool_k, pool_v).
+    """
+    B = x.shape[0]
+    a = ctx.axis if ctx.tp else None
+    positions = lengths[:, None]                                # (B, 1) RoPE
+    q, k_new, v_new = _qkv(ctx, params, x, cfg, positions)
+
+    bs = pool_k.shape[1]
+    block_ids = jnp.take_along_axis(tables, (lengths // bs)[:, None], axis=1)[:, 0]
+    offs = lengths % bs
+    pool_k = pool_k.at[block_ids, offs].set(k_new[:, 0].astype(pool_k.dtype))
+    pool_v = pool_v.at[block_ids, offs].set(v_new[:, 0].astype(pool_v.dtype))
+    pool_k = constrain(ctx, pool_k, None, None, a)
+    pool_v = constrain(ctx, pool_v, None, None, a)
+
+    # (B, max_blocks, bs, kv) -> logical (B, T, kv); block j of a slot's
+    # table holds that slot's positions [j*bs, (j+1)*bs)
+    k_all = pool_k[tables].reshape(B, -1, cfg.kv_dim)
+    v_all = pool_v[tables].reshape(B, -1, cfg.kv_dim)
+    k_all = constrain(ctx, k_all, ctx.batch, None, a)
+    v_all = constrain(ctx, v_all, ctx.batch, None, a)
+
+    # per-slot causal mask: slot b attends to t <= lengths[b] (its current
+    # token's position, just written above)
+    out = _attend_block(q, k_all.astype(q.dtype), v_all.astype(q.dtype),
+                        lengths[:, None],
+                        jnp.arange(k_all.shape[1], dtype=jnp.int32),
+                        causal=True, window=window, scale=cfg.head_dim**-0.5,
+                        kv_heads=cfg.n_kv_heads)
+    out = constrain(ctx, out, ctx.batch, None, a)
+    y = row_linear(ctx, out, params["wo"]["w"], n_tokens=B)
+    return y, pool_k, pool_v
 
 
 def attention_specs(cfg: ModelConfig, ctx: TPContext):

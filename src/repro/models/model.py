@@ -14,7 +14,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.core.tp import TPContext, constrain, row_linear
-from repro.models.attention import KVCache, attention, attention_specs, init_attention
+from repro.models.attention import (
+    KVCache, attention, attention_specs, init_attention, paged_attention_decode,
+)
 from repro.models.common import (
     Initializer, embed, init_norm, rms_norm, unembed,
 )
@@ -218,8 +220,15 @@ class Model:
             ]
         return cache
 
-    def prefill(self, ctx: TPContext, params, batch, cache) -> Tuple[jnp.ndarray, Any]:
-        """Process the prompt; returns (last-token logits (B, V), cache)."""
+    def prefill(self, ctx: TPContext, params, batch, cache, *,
+                last_index=None) -> Tuple[jnp.ndarray, Any]:
+        """Process the prompt; returns (last-token logits (B, V), cache).
+
+        last_index: position to read logits from (int32 scalar, traced OK).
+        Defaults to the final position; the continuous-batching engine passes
+        the last REAL token's index when prompts are right-padded to a
+        length bucket (pads sit after it, so causal masking hides them).
+        """
         cfg = self.cfg
         x = self._embed_inputs(ctx, params, batch)
         cross_kv = cache.get("cross")
@@ -234,7 +243,11 @@ class Model:
         else:
             x, new_layer_caches, _ = apply_stack(
                 ctx, cfg, params["layers"], x, pos=pos, caches=cache["layers"])
-        x = rms_norm(x[:, -1:, :], params["final_norm"]["w"])
+        if last_index is None:
+            x = x[:, -1:, :]
+        else:
+            x = jax.lax.dynamic_slice_in_dim(x, last_index, 1, axis=1)
+        x = rms_norm(x, params["final_norm"]["w"])
         head = params.get("lm_head", params["embed"])["w"]
         logits = unembed(ctx, x, head)[:, 0]
         prompt_len = batch["tokens"].shape[1] + (
@@ -264,6 +277,66 @@ class Model:
         logits = unembed(ctx, x, head)[:, 0]
         new_cache = {**cache, "layers": new_layer_caches, "pos": pos + 1}
         return logits, new_cache
+
+    def decode_step_paged(self, ctx: TPContext, params, tokens, state,
+                          tables, lengths) -> Tuple[jnp.ndarray, Any]:
+        """Continuous-batching decode: tokens (B, 1) over B slots with
+        PER-SLOT positions against the paged KV cache (see
+        serving/kv_cache.py and DESIGN.md §Decode step).
+
+        state: pytree from ``init_paged_state`` (attention block pools,
+        batched recurrent caches, optional per-slot encoder K/V);
+        tables (B, max_blocks) int32; lengths (B,) int32 per-slot write
+        positions. Shapes are independent of which slots are live, so this
+        compiles exactly once regardless of request arrivals/departures.
+        Returns (logits (B, V), new_state).
+        """
+        from repro.models.moe import moe
+        from repro.models.transformer import _has_mlp_sublayer, apply_layer
+
+        cfg = self.cfg
+        x = embed(ctx, params["embed"]["w"], tokens)
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+        pools_k = list(state["pools_k"])
+        pools_v = list(state["pools_v"])
+        rec = list(state["rec"])
+        ai = ri = 0
+        for i, spec in enumerate(cfg.layers):
+            lp = params["layers"][i]
+            if spec.kind == "attn":
+                h = rms_norm(x, lp["ln1"]["w"])
+                out, pools_k[ai], pools_v[ai] = paged_attention_decode(
+                    ctx, lp["core"], h, cfg, lengths=lengths,
+                    pool_k=pools_k[ai], pool_v=pools_v[ai], tables=tables,
+                    window=spec.window)
+                ai += 1
+                x = constrain(ctx, x + out, ctx.batch, None, None)
+                if _has_mlp_sublayer(cfg, spec):
+                    h = rms_norm(x, lp["ln2"]["w"])
+                    if spec.moe:
+                        out, _ = moe(ctx, lp["moe"], h, cfg)
+                    else:
+                        out = mlp(ctx, lp["mlp"], h, cfg)
+                    x = constrain(ctx, x + out, ctx.batch, None, None)
+            else:
+                # recurrent kinds are position-free: reuse the dense-layer
+                # path with the slot-batched cache
+                x, rec[ri], _ = apply_layer(ctx, cfg, spec, lp, x,
+                                            pos=jnp.int32(0), cache=rec[ri],
+                                            decode=True)
+                ri += 1
+            if cfg.encoder_decoder:
+                xp = params["xattn"][i]
+                h = rms_norm(x, xp["ln"]["w"])
+                ck = KVCache(k=state["cross_k"][i], v=state["cross_v"][i])
+                out, _ = attention(ctx, xp["core"], h, cfg, pos=jnp.int32(0),
+                                   cross_kv=ck)
+                x = x + out
+        x = rms_norm(x, params["final_norm"]["w"])
+        head = params.get("lm_head", params["embed"])["w"]
+        logits = unembed(ctx, x, head)[:, 0]
+        new_state = {**state, "pools_k": pools_k, "pools_v": pools_v, "rec": rec}
+        return logits, new_state
 
     def _serve_encdec(self, ctx, params, x, layer_caches, cross_kv, pos, *, decode):
         cfg = self.cfg

@@ -1,8 +1,15 @@
 from repro.serving.engine import Engine, Request
-from repro.serving.kv_cache import cache_bytes, cache_specs
-from repro.serving.ttft import HARDWARE, Hardware, ttft_breakdown, ttft_seconds
+from repro.serving.kv_cache import (
+    BlockAllocator, cache_bytes, cache_specs, init_paged_state,
+    paged_cache_bytes,
+)
+from repro.serving.ttft import (
+    HARDWARE, Hardware, RequestTiming, ServeStats, ttft_breakdown, ttft_seconds,
+)
 
 __all__ = [
     "Engine", "Request", "cache_bytes", "cache_specs",
-    "HARDWARE", "Hardware", "ttft_breakdown", "ttft_seconds",
+    "BlockAllocator", "init_paged_state", "paged_cache_bytes",
+    "HARDWARE", "Hardware", "RequestTiming", "ServeStats",
+    "ttft_breakdown", "ttft_seconds",
 ]

@@ -1,23 +1,32 @@
-"""Serving engine: jit-compiled prefill/decode steps, batched request
-scheduling, greedy/temperature sampling, and TTFT instrumentation.
+"""Continuous-batching serving engine over a paged KV cache.
 
 This is the deployment surface the paper profiles: prefill is where the
 compressed TP collectives pay off; decode is policy-gated to uncompressed
 (paper §5.2/A100 finding: codec overhead loses when payloads are small).
+Architecture, invariants, and the compression gating between prefill and
+decode are documented in DESIGN.md.
+
+Shape-stability contract: the batched decode step always runs over all
+``max_slots`` slots and the prefill/insert pair is specialized per prompt
+LENGTH BUCKET, so requests joining and leaving mid-flight never trigger
+recompilation — ``decode_cache_size()`` stays at 1 for a whole run.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.policy import NO_COMPRESSION
 from repro.core.tp import TPContext
 from repro.models.model import Model
-from repro.serving.kv_cache import cache_specs
+from repro.serving.kv_cache import BlockAllocator, init_paged_state
+from repro.serving.ttft import RequestTiming, ServeStats
 
 __all__ = ["Request", "Engine"]
 
@@ -27,99 +36,375 @@ class Request:
     prompt: np.ndarray            # int32 token ids
     max_new_tokens: int = 16
     temperature: float = 0.0
+    arrival_s: float = 0.0        # offset from run() start (staggered traffic)
+    eos_id: Optional[int] = None  # stop early on this token
     # filled by the engine:
     output: Optional[np.ndarray] = None
     ttft_s: Optional[float] = None
     latency_s: Optional[float] = None
+    timing: Optional[RequestTiming] = None
+
+
+@dataclasses.dataclass
+class _Work:
+    """Scheduler-internal request state (survives preemptions)."""
+
+    req: Request
+    prompt: np.ndarray            # effective prompt: original + generated on
+                                  # readmission after a preemption (recompute)
+    extra: Dict[str, jnp.ndarray]  # per-request model extras (1, ...) slices
+    arrival: float
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    admitted_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    preemptions: int = 0
+
+    @property
+    def done(self) -> bool:
+        if len(self.tokens) >= self.req.max_new_tokens:
+            return True
+        return (self.req.eos_id is not None and self.tokens
+                and self.tokens[-1] == self.req.eos_id)
 
 
 class Engine:
-    """Static-batch serving engine (batch size fixed at construction; real
-    deployments would add continuous batching on top — see DESIGN.md)."""
+    """Continuous-batching engine: paged KV blocks, FIFO admission by arrival
+    time, LIFO preemption (evict-and-recompute) under block pressure."""
 
     def __init__(self, model: Model, params, ctx: TPContext, *,
-                 batch_size: int, max_len: int, cache_dtype=jnp.bfloat16,
-                 donate_cache: bool = True):
+                 max_len: int, batch_size: Optional[int] = None,
+                 max_slots: Optional[int] = None, block_size: int = 16,
+                 n_blocks: Optional[int] = None, cache_dtype=jnp.bfloat16,
+                 compress_decode: bool = False, donate_cache: bool = True):
         self.model = model
+        self.cfg = model.cfg
         self.ctx = ctx
         self.params = params
-        self.batch_size = batch_size
+        self.n_slots = max_slots or batch_size or 4
+        self.batch_size = self.n_slots  # back-compat alias
         self.max_len = max_len
+        self.block_size = block_size
+        self.max_blocks = -(-max_len // block_size)
+        # full provisioning by default (+1 for the reserved null block);
+        # pass a smaller n_blocks to exercise eviction under memory pressure
+        self.n_blocks = n_blocks or (self.n_slots * self.max_blocks + 1)
         self.cache_dtype = cache_dtype
+        self.stats = ServeStats()
 
-        def prefill(params, batch, cache):
-            return model.prefill(ctx, params, batch, cache)
+        # right-padding to a bucket is only sound when every layer is
+        # attention (causal masking hides trailing pads); recurrent layers
+        # fold pads into their state, so those archs prefill at exact length
+        self._pad_ok = all(s.kind == "attn" for s in self.cfg.layers)
+        self._n_prefix = self.cfg.n_patches if self.cfg.frontend == "vision" else 0
 
-        def decode(params, tokens, cache):
-            return model.decode_step(ctx, params, tokens, cache)
+        # paper §5.2 gating: compression pays on prefill's large payloads;
+        # decode moves one token per slot, so it defaults to plain psum
+        self.ctx_decode = ctx if compress_decode else dataclasses.replace(
+            ctx, policy=NO_COMPRESSION)
 
         donate = (2,) if donate_cache else ()
-        self._prefill = jax.jit(prefill, donate_argnums=donate)
-        self._decode = jax.jit(decode, donate_argnums=donate)
+        self._insert_donate = (0,) if donate_cache else ()
+        self._decode = jax.jit(
+            lambda p, toks, state, tables, lengths: model.decode_step_paged(
+                self.ctx_decode, p, toks, state, tables, lengths),
+            donate_argnums=donate)
+        self._sample = jax.jit(self._sample_impl)
+        self._prefill_fns: Dict[int, tuple] = {}
+        self._reset()
 
-    def _sample(self, logits: jnp.ndarray, temperature: float, key) -> jnp.ndarray:
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+    # ------------------------------------------------------------- state mgmt
+
+    def _reset(self) -> None:
+        self.allocator = BlockAllocator(self.n_blocks)
+        self._state = init_paged_state(self.cfg, self.n_slots, self.n_blocks,
+                                       self.block_size, self.cache_dtype)
+        self._tables = np.zeros((self.n_slots, self.max_blocks), np.int32)
+        self._lengths = np.zeros((self.n_slots,), np.int32)
+        self._cur = np.zeros((self.n_slots,), np.int32)
+        self._running: Dict[int, _Work] = {}
+        self._waiting: List[_Work] = []
+
+    def decode_cache_size(self) -> int:
+        """Compiled-variant count of the batched decode step (jit-stability
+        witness: stays 1 however requests arrive and leave)."""
+        return self._decode._cache_size()
+
+    # ------------------------------------------------------- shape bucketing
+
+    def _shapes_for(self, prompt_len: int):
+        """(text bucket, total prefill length, blocks needed)."""
+        cap = self.max_blocks * self.block_size - self._n_prefix
+        if self._pad_ok:
+            bucket = self.block_size
+            while bucket < prompt_len:
+                bucket *= 2
+            bucket = min(bucket, cap)
+        else:
+            bucket = prompt_len
+        if bucket < prompt_len:
+            raise ValueError(
+                f"prompt ({prompt_len} tokens) exceeds cache capacity ({cap})")
+        total = bucket + self._n_prefix
+        return bucket, total, -(-total // self.block_size)
+
+    def _prefill_for(self, prompt_len: int):
+        bucket, total, nb = self._shapes_for(prompt_len)
+        if bucket not in self._prefill_fns:
+            model, ctx, dtype = self.model, self.ctx, self.cache_dtype
+
+            def prefill(params, batch, last_index):
+                cache = model.init_cache(1, total, dtype)
+                return model.prefill(ctx, params, batch, cache,
+                                     last_index=last_index)
+
+            self._prefill_fns[bucket] = (
+                jax.jit(prefill), self._make_insert(nb, total), total, nb)
+        return (bucket,) + self._prefill_fns[bucket]
+
+    def _make_insert(self, nb: int, total: int):
+        """Jitted prefill-insert: scatter a single-request dense prefill cache
+        into the slot's allocated blocks / batched recurrent state rows."""
+        bs, cfg = self.block_size, self.cfg
+        pad = nb * bs - total
+
+        def insert(state, layer_caches, cross, slot, block_ids):
+            pools_k = list(state["pools_k"])
+            pools_v = list(state["pools_v"])
+            rec = list(state["rec"])
+            ai = ri = 0
+            for i, spec in enumerate(cfg.layers):
+                c = layer_caches[i]
+                if spec.kind == "attn":
+                    k = jnp.pad(c.k[0], ((0, pad), (0, 0))).reshape(nb, bs, -1)
+                    v = jnp.pad(c.v[0], ((0, pad), (0, 0))).reshape(nb, bs, -1)
+                    pools_k[ai] = pools_k[ai].at[block_ids].set(
+                        k.astype(pools_k[ai].dtype))
+                    pools_v[ai] = pools_v[ai].at[block_ids].set(
+                        v.astype(pools_v[ai].dtype))
+                    ai += 1
+                else:
+                    rec[ri] = jax.tree.map(
+                        lambda sb, s1: sb.at[slot].set(s1[0].astype(sb.dtype)),
+                        rec[ri], c)
+                    ri += 1
+            new = {**state, "pools_k": pools_k, "pools_v": pools_v, "rec": rec}
+            if cross is not None:
+                ck, cv = list(state["cross_k"]), list(state["cross_v"])
+                for l in range(cfg.n_layers):
+                    ck[l] = ck[l].at[slot].set(cross[l].k[0].astype(ck[l].dtype))
+                    cv[l] = cv[l].at[slot].set(cross[l].v[0].astype(cv[l].dtype))
+                new["cross_k"], new["cross_v"] = ck, cv
+            return new
+
+        return jax.jit(insert, donate_argnums=self._insert_donate)
+
+    # ------------------------------------------------------------- sampling
+
+    @staticmethod
+    def _sample_impl(logits, temps, key):
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        keys = jax.random.split(key, logits.shape[0])
+        safe = jnp.maximum(temps, 1e-6)[:, None]
+        drawn = jax.vmap(jax.random.categorical)(keys, logits / safe)
+        return jnp.where(temps > 0, drawn.astype(jnp.int32), greedy)
+
+    # ------------------------------------------------------------ scheduling
+
+    def _free_slot(self) -> Optional[int]:
+        for s in range(self.n_slots):
+            if s not in self._running:
+                return s
+        return None
+
+    def _admit_ready(self, now: float) -> None:
+        while self._waiting and self._waiting[0].arrival <= now:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            w = self._waiting[0]
+            _, _, _, _, nb = self._prefill_for(len(w.prompt))
+            ids = self.allocator.alloc(nb)
+            if ids is None:
+                if not self._running:
+                    raise RuntimeError(
+                        f"prefill needs {nb} KV blocks; only "
+                        f"{self.allocator.n_free} free and nothing to evict — "
+                        f"pool too small for this request")
+                return  # decode will retire/evict slots and free blocks
+            self._waiting.pop(0)
+            self._admit(w, slot, ids)
+
+    def _admit(self, w: _Work, slot: int, ids: List[int]) -> None:
+        _, prefill, insert, total, nb = self._prefill_for(len(w.prompt))
+        L = len(w.prompt)
+        bucket = total - self._n_prefix
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :L] = w.prompt
+        batch = {"tokens": jnp.asarray(tokens), **w.extra}
+        last_index = jnp.int32(self._n_prefix + L - 1)
+
+        logits, cache = prefill(self.params, batch, last_index)
+        self._key, sub = jax.random.split(self._key)
+        temp = jnp.full((1,), w.req.temperature, jnp.float32)
+        tok = int(np.asarray(self._sample(logits, temp, sub))[0])
+        self._state = insert(self._state, cache["layers"], cache.get("cross"),
+                             jnp.int32(slot), jnp.asarray(ids, np.int32))
+
+        now = time.perf_counter() - self._t0
+        w.blocks = ids
+        self._tables[slot, :] = 0
+        self._tables[slot, :nb] = ids
+        self._lengths[slot] = self._n_prefix + L
+        self._cur[slot] = tok
+        if w.admitted_t is None:
+            w.admitted_t = now
+        if w.first_token_t is None:
+            w.first_token_t = now  # TTFT endpoint: first sampled token
+        w.tokens.append(tok)
+        self._running[slot] = w
+        if w.done:
+            self._retire(slot, now)
+
+    def _grow_or_evict(self) -> None:
+        """Give every live slot a block covering its next write position,
+        preempting the latest-arrival request when the pool runs dry."""
+        for slot in sorted(self._running, key=lambda s: self._running[s].arrival):
+            if slot not in self._running:  # preempted by an earlier iteration
+                continue
+            w = self._running[slot]
+            while len(w.blocks) * self.block_size <= self._lengths[slot]:
+                got = self.allocator.alloc(1)
+                if got is None:
+                    victim = max(self._running,
+                                 key=lambda s: (self._running[s].arrival, s))
+                    if victim == slot and len(self._running) == 1:
+                        raise RuntimeError(
+                            "KV pool exhausted with a single request in "
+                            "flight — n_blocks too small for prompt+decode")
+                    self._preempt(victim)
+                    if victim == slot:
+                        break
+                    continue
+                w.blocks += got
+                self._tables[slot, len(w.blocks) - 1] = got[0]
+
+    def _preempt(self, slot: int) -> None:
+        """Evict-and-recompute: free the slot, fold generated tokens into the
+        prompt, and requeue; the readmission prefill rebuilds the KV."""
+        w = self._running.pop(slot)
+        self.allocator.free(w.blocks)
+        w.blocks = []
+        self._clear_slot(slot)
+        w.prompt = np.concatenate(
+            [np.asarray(w.req.prompt, np.int32),
+             np.asarray(w.tokens, np.int32)])
+        w.preemptions += 1
+        bisect.insort(self._waiting, w, key=lambda x: x.arrival)
+
+    def _clear_slot(self, slot: int) -> None:
+        self._tables[slot, :] = 0
+        self._lengths[slot] = 0
+        self._cur[slot] = 0
+
+    def _retire(self, slot: int, now: float) -> None:
+        w = self._running.pop(slot)
+        self.allocator.free(w.blocks)
+        w.blocks = []
+        self._clear_slot(slot)
+        r = w.req
+        r.output = np.asarray(w.tokens[: r.max_new_tokens], np.int32)
+        r.timing = RequestTiming(
+            arrival_s=w.arrival, admitted_s=w.admitted_t,
+            first_token_s=w.first_token_t, finished_s=now,
+            n_prompt=len(np.asarray(r.prompt)), n_generated=len(w.tokens),
+            n_preemptions=w.preemptions)
+        r.ttft_s = r.timing.ttft_s
+        r.latency_s = r.timing.latency_s
+        self.stats.record(r.timing)
+
+    def _decode_once(self) -> None:
+        logits, self._state = self._decode(
+            self.params, jnp.asarray(self._cur[:, None]), self._state,
+            jnp.asarray(self._tables), jnp.asarray(self._lengths))
+        temps = np.zeros((self.n_slots,), np.float32)
+        for slot, w in self._running.items():
+            self._lengths[slot] += 1
+            temps[slot] = w.req.temperature
+        self._key, sub = jax.random.split(self._key)
+        toks = np.asarray(self._sample(logits, jnp.asarray(temps), sub))
+        now = time.perf_counter() - self._t0
+        for slot, w in list(self._running.items()):
+            tok = int(toks[slot])
+            w.tokens.append(tok)
+            self._cur[slot] = tok
+            if w.done:
+                self._retire(slot, now)
+
+    # ------------------------------------------------------------------ API
 
     def run(self, requests: List[Request], *, extra_inputs: Optional[Dict] = None,
             seed: int = 0) -> List[Request]:
-        """Serve a batch of requests (padded to equal prompt length)."""
-        assert len(requests) <= self.batch_size
-        B = self.batch_size
-        plen = max(len(r.prompt) for r in requests)
-        prompts = np.zeros((B, plen), np.int32)
+        """Serve ``requests``; returns them with output/ttft/latency filled.
+
+        ``arrival_s`` offsets are honored against the run's wall clock, so
+        staggered traffic exercises true continuous batching: late arrivals
+        join slots that earlier requests have already vacated or still hold.
+        ``extra_inputs`` are full-batch arrays (one row per request) that are
+        sliced per request at prefill (vision patches, encoder frames).
+        """
+        self._reset()
+        self.stats = ServeStats()
+        self._key = jax.random.PRNGKey(seed)
+        self._t0 = time.perf_counter()
+        works = []
+        capacity = self.max_blocks * self.block_size
         for i, r in enumerate(requests):
-            prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
+            need = self._n_prefix + len(np.asarray(r.prompt)) + r.max_new_tokens - 1
+            if need > capacity:
+                raise ValueError(
+                    f"request {i}: prompt+decode needs {need} cache positions "
+                    f"but max_len={self.max_len} provides {capacity}")
+            extra = {k: jnp.asarray(v[i:i + 1])
+                     for k, v in (extra_inputs or {}).items()}
+            works.append(_Work(req=r, prompt=np.asarray(r.prompt, np.int32),
+                               extra=extra, arrival=float(r.arrival_s)))
+        self._waiting = sorted(works, key=lambda w: w.arrival)
 
-        cache = self.model.init_cache(B, self.max_len, self.cache_dtype)
-        batch = {"tokens": jnp.asarray(prompts)}
-        if extra_inputs:
-            batch.update(extra_inputs)
-
-        key = jax.random.PRNGKey(seed)
-        t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, batch, cache)
-        logits.block_until_ready()
-        ttft = time.perf_counter() - t0
-
-        max_new = max(r.max_new_tokens for r in requests)
-        temp = max(r.temperature for r in requests)
-        outs = []
-        tok = self._sample(logits, temp, key)
-        outs.append(np.asarray(tok))
-        for step in range(max_new - 1):
-            key, sub = jax.random.split(key)
-            logits, cache = self._decode(self.params, tok[:, None], cache)
-            tok = self._sample(logits, temp, sub)
-            outs.append(np.asarray(tok))
-        jax.block_until_ready(tok)
-        total = time.perf_counter() - t0
-
-        out_arr = np.stack(outs, axis=1)  # (B, max_new)
-        for i, r in enumerate(requests):
-            r.output = out_arr[i, : r.max_new_tokens]
-            r.ttft_s = ttft
-            r.latency_s = total
+        while self._waiting or self._running:
+            now = time.perf_counter() - self._t0
+            self._admit_ready(now)
+            if not self._running:
+                if self._waiting:
+                    time.sleep(min(max(self._waiting[0].arrival - now, 0.0),
+                                   0.005))
+                continue
+            self._grow_or_evict()
+            if self._running:
+                self._decode_once()
         return requests
 
     def measure_ttft(self, prompt_len: int, *, iters: int = 8,
                      extra_inputs: Optional[Dict] = None) -> Dict[str, float]:
-        """Median TTFT of a full-batch prefill (the paper's Table 3 metric)."""
-        B = self.batch_size
-        prompts = np.random.default_rng(0).integers(
-            0, self.model.cfg.vocab_size, (B, prompt_len), dtype=np.int64
+        """Median prefill TTFT at a given prompt length (Table 3 metric),
+        measured through the bucketed prefill the engine actually serves."""
+        prompt = np.random.default_rng(0).integers(
+            0, self.cfg.vocab_size, (prompt_len,), dtype=np.int64
         ).astype(np.int32)
-        batch = {"tokens": jnp.asarray(prompts)}
+        _, prefill, _, total, _ = self._prefill_for(prompt_len)
+        bucket = total - self._n_prefix
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :prompt_len] = prompt
+        batch = {"tokens": jnp.asarray(tokens)}
         if extra_inputs:
-            batch.update(extra_inputs)
+            batch.update({k: jnp.asarray(v[0:1]) for k, v in extra_inputs.items()})
+        last_index = jnp.int32(self._n_prefix + prompt_len - 1)
         times = []
         for _ in range(iters):
-            cache = self.model.init_cache(B, self.max_len, self.cache_dtype)
             t0 = time.perf_counter()
-            logits, cache = self._prefill(self.params, batch, cache)
+            logits, _cache = prefill(self.params, batch, last_index)
             logits.block_until_ready()
             times.append(time.perf_counter() - t0)
         times = np.array(times[1:])  # drop compile
-        return {"median_s": float(np.median(times)), "std_s": float(np.std(times)),
-                "iters": len(times)}
+        return {"median_s": float(np.median(times)),
+                "std_s": float(np.std(times)), "iters": len(times)}

@@ -1,9 +1,19 @@
-"""KV-cache utilities: sizing, sharding specs, and the windowed ring-buffer
+"""KV-cache utilities: sizing, sharding specs, the windowed ring-buffer
 variant (a §Perf optimization: sliding-window layers allocate only
-window-sized caches instead of full-sequence ones)."""
+window-sized caches instead of full-sequence ones), and the paged KV cache
+backing the continuous-batching engine (DESIGN.md §Paged cache).
+
+Paged layout: every attention layer owns a block pool
+``(n_blocks, block_size, kv_dim)`` for K and V; a slot's logical sequence is
+the concatenation of the blocks its row of the block table names, so
+admission/eviction never copies KV — only the host-side free list and the
+tiny block-table array change. Block 0 is reserved as a null/scratch block
+that inactive slots point at (their masked writes land there harmlessly).
+"""
 from __future__ import annotations
 
-from typing import Optional
+import collections
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +25,13 @@ from repro.models.attention import KVCache
 from repro.models.ssm import MambaCache
 from repro.models.xlstm import MLSTMCache, SLSTMCache
 
-__all__ = ["cache_bytes", "cache_specs", "layer_cache_len", "ring_positions"]
+__all__ = [
+    "cache_bytes", "cache_specs", "layer_cache_len", "ring_positions",
+    "BlockAllocator", "NULL_BLOCK", "attn_layer_count", "init_paged_state",
+    "paged_cache_bytes",
+]
+
+NULL_BLOCK = 0  # reserved scratch block: never allocated, absorbs masked writes
 
 
 def layer_cache_len(spec: LayerSpec, max_len: int, *, ring: bool = False) -> int:
@@ -81,3 +97,76 @@ def cache_specs(ctx: TPContext, cache: dict) -> dict:
 def ring_positions(pos: jnp.ndarray, window: int) -> jnp.ndarray:
     """Write index into a window-sized ring buffer."""
     return jnp.mod(pos, window)
+
+
+# --------------------------------------------------------------- paged cache
+
+
+class BlockAllocator:
+    """Host-side free list over the KV block pool.
+
+    Pure scheduling state: allocation/free never touch device memory (the
+    pools are preallocated); a block id is just an index into the pool's
+    leading dim. Block 0 (``NULL_BLOCK``) is reserved and never handed out.
+    """
+
+    def __init__(self, n_blocks: int):
+        assert n_blocks >= 2, "need at least one allocatable block"
+        self.n_blocks = n_blocks
+        self._free = collections.deque(range(1, n_blocks))
+        self.high_water = 0  # max blocks simultaneously allocated (stats)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_allocated(self) -> int:
+        return (self.n_blocks - 1) - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` block ids, or None (and no change) if they don't fit."""
+        if n > len(self._free):
+            return None
+        ids = [self._free.popleft() for _ in range(n)]
+        self.high_water = max(self.high_water, self.n_allocated)
+        return ids
+
+    def free(self, ids: List[int]) -> None:
+        self._free.extend(ids)
+
+
+def attn_layer_count(cfg: ModelConfig) -> int:
+    return sum(1 for spec in cfg.layers if spec.kind == "attn")
+
+
+def init_paged_state(cfg: ModelConfig, n_slots: int, n_blocks: int,
+                     block_size: int, dtype=jnp.bfloat16) -> dict:
+    """Device-side continuous-batching cache state.
+
+    ``pools_k``/``pools_v``: one ``(n_blocks, block_size, kv_dim)`` pool per
+    attention layer. ``rec``: batched recurrent caches (one entry per
+    non-attention layer, in layer order). ``cross_k``/``cross_v``: per-layer
+    per-slot encoder K/V for encoder-decoder models.
+    """
+    from repro.models.transformer import init_layer_cache
+
+    pools_k, pools_v, rec = [], [], []
+    for spec in cfg.layers:
+        if spec.kind == "attn":
+            pools_k.append(jnp.zeros((n_blocks, block_size, cfg.kv_dim), dtype))
+            pools_v.append(jnp.zeros((n_blocks, block_size, cfg.kv_dim), dtype))
+        else:
+            rec.append(init_layer_cache(cfg, spec, n_slots, 0, dtype))
+    state = {"pools_k": pools_k, "pools_v": pools_v, "rec": rec}
+    if cfg.encoder_decoder:
+        z = lambda: [jnp.zeros((n_slots, cfg.encoder_seq, cfg.kv_dim), dtype)
+                     for _ in range(cfg.n_layers)]
+        state["cross_k"], state["cross_v"] = z(), z()
+    return state
+
+
+def paged_cache_bytes(cfg: ModelConfig, n_blocks: int, block_size: int,
+                      dtype_bytes: int = 2) -> int:
+    """Device bytes held by the paged pools (the engine's KV budget)."""
+    return 2 * attn_layer_count(cfg) * n_blocks * block_size * cfg.kv_dim * dtype_bytes

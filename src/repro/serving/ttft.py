@@ -20,12 +20,13 @@ benchmarks/table3_ttft.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
 from repro.core.formats import MXSpec
 
-__all__ = ["Hardware", "HARDWARE", "ttft_seconds", "ttft_breakdown"]
+__all__ = ["Hardware", "HARDWARE", "ttft_seconds", "ttft_breakdown",
+           "RequestTiming", "ServeStats"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,3 +109,74 @@ def ttft_breakdown(
 
 def ttft_seconds(cfg, hw, tp, batch, seq, spec=None, scheme: str = "gather") -> float:
     return ttft_breakdown(cfg, hw, tp, batch, seq, spec, scheme=scheme)["total"]
+
+
+# ----------------------------------------------------- measured serving stats
+#
+# The analytic model above predicts TTFT on hardware we can't run; the
+# classes below account for what the continuous-batching Engine actually
+# measures per request (arrival -> admission -> first token -> finish).
+
+
+@dataclasses.dataclass
+class RequestTiming:
+    """Wall-clock milestones for one request, relative to the run's start."""
+
+    arrival_s: float                 # request entered the system
+    admitted_s: float                # first admission (prefill start)
+    first_token_s: float             # first sampled token (TTFT endpoint)
+    finished_s: float                # last token sampled
+    n_prompt: int
+    n_generated: int
+    n_preemptions: int = 0           # evict/recompute round trips
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_s - self.arrival_s
+
+    @property
+    def queue_s(self) -> float:
+        return self.admitted_s - self.arrival_s
+
+
+def _percentile(xs: List[float], p: float) -> float:
+    xs = sorted(xs)
+    if not xs:
+        return float("nan")
+    i = min(len(xs) - 1, max(0, round(p / 100 * (len(xs) - 1))))
+    return xs[i]
+
+
+class ServeStats:
+    """Aggregates RequestTimings across a serving run."""
+
+    def __init__(self):
+        self.timings: List[RequestTiming] = []
+
+    def record(self, t: RequestTiming) -> None:
+        self.timings.append(t)
+
+    def summary(self) -> Dict[str, float]:
+        ts = self.timings
+        if not ts:
+            return {"n_requests": 0}
+        ttfts = [t.ttft_s for t in ts]
+        lats = [t.latency_s for t in ts]
+        generated = sum(t.n_generated for t in ts)
+        makespan = max(t.finished_s for t in ts) - min(t.arrival_s for t in ts)
+        return {
+            "n_requests": len(ts),
+            "ttft_p50_s": _percentile(ttfts, 50),
+            "ttft_p90_s": _percentile(ttfts, 90),
+            "ttft_mean_s": sum(ttfts) / len(ttfts),
+            "latency_p50_s": _percentile(lats, 50),
+            "latency_p90_s": _percentile(lats, 90),
+            "n_generated": generated,
+            "makespan_s": makespan,
+            "tokens_per_s": generated / makespan if makespan > 0 else float("nan"),
+            "n_preemptions": sum(t.n_preemptions for t in ts),
+        }

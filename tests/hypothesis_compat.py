@@ -1,0 +1,63 @@
+"""`hypothesis` re-export with a minimal deterministic fallback.
+
+The property tests only need three strategies (integers, floats,
+sampled_from) plus @given/@settings. When the real hypothesis is installed
+(requirements-dev.txt pins it) it is used unchanged; otherwise this shim runs
+each property `max_examples` times with values drawn from a fixed-seed
+numpy Generator — no shrinking, no database, but the same coverage shape, so
+test collection never errors on a missing optional dependency.
+"""
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import functools
+    import inspect
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class strategies:  # noqa: N801 — mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda r: int(r.integers(min_value, max_value, endpoint=True)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: float(r.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: elements[int(r.integers(len(elements)))])
+
+    def settings(max_examples=20, deadline=None, **_):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", 20))
+                rng = np.random.default_rng(0)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+            # hide the strategy-filled params so pytest doesn't treat them
+            # as fixtures (real hypothesis does the same)
+            sig = inspect.signature(fn)
+            kept = [p for name, p in sig.parameters.items()
+                    if name not in strats]
+            wrapper.__signature__ = sig.replace(parameters=kept)
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -12,10 +12,12 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np, re, dataclasses
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import compat
+from repro.compat import set_mesh
 from repro.core import TPContext, row_linear, fused_mlp, PAPER_DEFAULT, NO_COMPRESSION
 from repro.core.policy import CompressionPolicy
 from repro.core.formats import MXSpec
-mesh = jax.make_mesh((2, 4), ("data", "model"))
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.normal(size=(8, 16, 256)), jnp.float32)
 w = jnp.asarray(rng.normal(size=(256, 128)) / 16, jnp.float32)
@@ -39,7 +41,7 @@ def run_case(body: str):
 def test_uncompressed_psum_matches_local():
     run_case("""
     ctx = TPContext(mesh=mesh, policy=NO_COMPRESSION)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         y = jax.jit(lambda x, w: row_linear(ctx, x, w))(xs, w)
     assert rel(y, yl) < 1e-5, rel(y, yl)
     """)
@@ -48,7 +50,7 @@ def test_uncompressed_psum_matches_local():
 def test_compressed_psum_error_within_fp4_bound():
     run_case("""
     ctx = TPContext(mesh=mesh, policy=PAPER_DEFAULT)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         y = jax.jit(lambda x, w: row_linear(ctx, x, w))(xs, w)
     r = rel(y, yl)
     assert 0.0 < r < 0.2, r  # FP4 intrinsic error ~11% on gaussians
@@ -59,7 +61,7 @@ def test_two_phase_variant_close_to_gather():
     run_case("""
     two = dataclasses.replace(PAPER_DEFAULT, variant="two_phase")
     ctx = TPContext(mesh=mesh, policy=two)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         y = jax.jit(lambda x, w: row_linear(ctx, x, w))(xs, w)
     r = rel(y, yl)
     assert 0.0 < r < 0.25, r  # ~sqrt(2) x gather error (double quantization)
@@ -69,7 +71,7 @@ def test_two_phase_variant_close_to_gather():
 def test_hlo_uses_u8_allgather_not_allreduce():
     run_case("""
     ctx = TPContext(mesh=mesh, policy=PAPER_DEFAULT)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         txt = jax.jit(lambda x, w: row_linear(ctx, x, w)).lower(xs, w).compile().as_text()
     gathers = re.findall(r'= (\\S+) all-gather\\(', txt)
     assert any(g.startswith("u8[") for g in gathers), gathers
@@ -81,7 +83,7 @@ def test_decode_gate_falls_back_to_psum():
     run_case("""
     ctx = TPContext(mesh=mesh, policy=PAPER_DEFAULT)  # min_tokens=8
     xd = xs[:, :1, :][:1]  # 1 token
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         txt = jax.jit(lambda x, w: row_linear(ctx, x, w)).lower(xd, w).compile().as_text()
     assert "all-reduce(" in txt
     """)
@@ -92,7 +94,7 @@ def test_batch_stays_sharded_inside_island():
     global — regression test for the partial-manual replication bug."""
     run_case("""
     ctx = TPContext(mesh=mesh, policy=PAPER_DEFAULT)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         txt = jax.jit(lambda x, w: row_linear(ctx, x, w)).lower(xs, w).compile().as_text()
     payload = [g for g in re.findall(r'= u8\\[([\\d,]+)\\][^ ]* all-gather', txt)]
     assert payload, "no u8 gathers found"
@@ -108,7 +110,7 @@ def test_fused_mlp_island_parity():
     wu = jnp.asarray(rng.normal(size=(256, 512)) / 16, jnp.float32)
     wd = jnp.asarray(rng.normal(size=(512, 256)) / 22, jnp.float32)
     ctx = TPContext(mesh=mesh, policy=NO_COMPRESSION)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         ym = jax.jit(lambda x: fused_mlp(ctx, x, wg, wu, wd))(xs)
     yl2 = fused_mlp(ctx_l, x, wg, wu, wd)
     assert rel(ym, yl2) < 1e-4, rel(ym, yl2)
@@ -128,7 +130,7 @@ def test_moe_island_parity():
     xb = jnp.asarray(rng.normal(size=(8, 16, cfg.d_model)), jnp.float32)
     out_l, _ = moe(ctx_l, p, xb, cfg)
     ctx = TPContext(mesh=mesh, policy=NO_COMPRESSION)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         xbs = jax.device_put(xb, NamedSharding(mesh, P("data", None, None)))
         out_m, _ = jax.jit(lambda x: moe(ctx, p, x, cfg))(xbs)
     assert rel(out_m, out_l) < 1e-4, rel(out_m, out_l)
@@ -140,7 +142,7 @@ def test_ste_gradient_flows_through_compressed_psum():
     ctx = TPContext(mesh=mesh, policy=dataclasses.replace(PAPER_DEFAULT, min_tokens=1))
     def loss(w):
         return jnp.sum(row_linear(ctx, xs, w) ** 2)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         g = jax.jit(jax.grad(loss))(w)
     gn = float(jnp.linalg.norm(g))
     assert np.isfinite(gn) and gn > 0, gn
@@ -149,7 +151,7 @@ def test_ste_gradient_flows_through_compressed_psum():
     ctx0 = TPContext(mesh=mesh, policy=NO_COMPRESSION)
     def loss0(w):
         return jnp.sum(row_linear(ctx0, xs, w) ** 2)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         g0 = jax.jit(jax.grad(loss0))(w)
     cos = float(jnp.sum(g * g0) / (jnp.linalg.norm(g) * jnp.linalg.norm(g0)))
     assert cos > 0.7, cos
@@ -163,10 +165,10 @@ def test_compressed_all_gather_roundtrip():
     def f(x):
         def island(xl):
             return compressed_all_gather(xl, "model", spec)
-        return jax.shard_map(island, mesh=mesh, in_specs=P(None, None, "model"),
+        return compat.shard_map(island, mesh=mesh, in_specs=P(None, None, "model"),
                              out_specs=P(None, None, None, "model"),
                              axis_names={"model"}, check_vma=False)(x)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         g = jax.jit(f)(x)
     # device j's slice of gathered shard i holds shard i's features
     for i in range(4):
