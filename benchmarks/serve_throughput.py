@@ -16,9 +16,17 @@ per-request accounting, the policy gating (compressed prefill / uncompressed
 decode), and the block-pool behavior — is what this benchmark exercises, and
 on TPU the same script produces the paper-style comparison.
 
+With ``--cache-spec`` (e.g. ``fp4_e2m1``) the run adds the memory-side
+comparison: a bf16 paged cache vs an MX wire-format cache at the SAME HBM
+byte budget. The quantized cache fits ~4x the KV blocks (fewer evictions
+under load) and the report carries a quality column — per-request token
+match rate against the bf16-cache outputs plus the spec's measured
+quantization error on the actual K/V distribution.
+
   PYTHONPATH=src python benchmarks/serve_throughput.py
   PYTHONPATH=src python benchmarks/serve_throughput.py --requests 12 \
       --slots 4 --prompt-len 96 --new-tokens 24 --rate 20
+  PYTHONPATH=src python benchmarks/serve_throughput.py --cache-spec fp4_e2m1
 """
 import argparse
 import dataclasses
@@ -31,12 +39,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced_config
-from repro.core.formats import MXSpec
+from repro.core.formats import KVCacheSpec, MXSpec
+from repro.core.mx import quantization_error
 from repro.core.policy import CompressionPolicy, NO_COMPRESSION
 from repro.launch.mesh import make_host_mesh
 from repro.launch.sharding import make_context
 from repro.models.model import Model
-from repro.serving import Engine, Request
+from repro.serving import Engine, Request, paged_cache_bytes
 
 OUT_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "serve"
 
@@ -53,11 +62,13 @@ def build_requests(n, prompt_len, new_tokens, rate_hz, vocab, seed=0):
     ]
 
 
-def run_policy(name, policy, model, params, mesh, args):
+def run_policy(name, policy, model, params, mesh, args, *,
+               cache_spec=None, n_blocks=None, cache_dtype=jnp.float32):
     ctx = make_context(mesh, None, policy=policy)
     engine = Engine(model, params, ctx, max_slots=args.slots,
                     max_len=args.prompt_len + args.new_tokens,
-                    block_size=args.block_size, cache_dtype=jnp.float32)
+                    block_size=args.block_size, cache_dtype=cache_dtype,
+                    cache_spec=cache_spec, n_blocks=n_blocks)
     reqs = build_requests(args.requests, args.prompt_len, args.new_tokens,
                           args.rate, model.cfg.vocab_size)
     # warmup run compiles prefill bucket + decode step outside the timed run
@@ -72,6 +83,9 @@ def run_policy(name, policy, model, params, mesh, args):
     record = {
         "policy": name,
         "describe": policy.describe(),
+        "cache_spec": engine.cache_spec.describe(),
+        "kv_pool_bytes": engine.kv_pool_bytes(),
+        "resident_blocks": engine.n_blocks - 1,  # minus reserved null block
         "requests": s["n_requests"],
         "generated_tokens": s["n_generated"],
         "wall_s": round(wall, 3),
@@ -90,7 +104,58 @@ def run_policy(name, policy, model, params, mesh, args):
           f"p90={record['ttft_ms']['p90']:8.1f} ms  "
           f"tokens/s={record['tokens_per_s']:7.1f}  "
           f"preempt={record['preemptions']}")
-    return record
+    return record, [r.output for r in reqs], engine
+
+
+def compare_caches(model, params, mesh, args):
+    """Memory-side comparison at an EQUAL HBM byte budget: bf16 dense pools
+    vs MX wire-format pools sized to the same bytes (so the quantized cache
+    holds ~compression-ratio x more resident blocks). Quality column: token
+    match rate vs the bf16-cache outputs + measured codec error on the
+    actual K/V the bf16 run produced."""
+    cfg = model.cfg
+    spec = KVCacheSpec.parse(args.cache_spec)
+    bs = args.block_size
+    max_blocks = -(-(args.prompt_len + args.new_tokens) // bs)
+    n_dense = args.slots * max_blocks + 1
+    budget = paged_cache_bytes(cfg, n_dense, bs, dtype_bytes=2)  # bf16 bytes
+    per_block_wire = paged_cache_bytes(cfg, 1, bs, cache_spec=spec)
+    # total block count (reserved null block included, as in n_dense) so the
+    # wire pools stay within the stated budget
+    n_quant = budget // per_block_wire
+    print(f"\n-- paged KV cache modes at equal budget "
+          f"({budget / 1e6:.2f} MB of bf16 pools) --")
+
+    base_rec, base_out, base_eng = run_policy(
+        "kv-bf16", NO_COMPRESSION, model, params, mesh, args,
+        cache_dtype=jnp.bfloat16)
+    # measured codec error on the K/V distribution the run actually produced
+    kv_sample = jnp.concatenate(
+        [p[1:].reshape(-1, cfg.kv_dim).astype(jnp.float32)
+         for p in (base_eng._state["pools_k"] + base_eng._state["pools_v"])])
+    err = {k: float(v) for k, v in quantization_error(kv_sample, spec.mx).items()}
+
+    quant_rec, quant_out, _ = run_policy(
+        f"kv-{spec.mx.name}", NO_COMPRESSION, model, params, mesh, args,
+        cache_spec=spec, n_blocks=n_quant, cache_dtype=jnp.bfloat16)
+
+    match = np.mean([np.mean(q[:len(b)] == b[:len(q)])
+                     for q, b in zip(quant_out, base_out)])
+    ratio = quant_rec["resident_blocks"] / base_rec["resident_blocks"]
+    print(f"resident KV blocks: bf16={base_rec['resident_blocks']} "
+          f"{spec.mx.name}={quant_rec['resident_blocks']} ({ratio:.2f}x) "
+          f"at {budget / 1e6:.2f} MB")
+    print(f"quality: token match vs bf16 cache = {match:.3f}; measured "
+          f"kv quantization error rel_l2={err['rel_l2']:.4f} "
+          f"sqnr={err['sqnr_db']:.1f} dB")
+    return {
+        "spec": spec.mx.name,
+        "byte_budget": int(budget),
+        "records": [base_rec, quant_rec],
+        "blocks_ratio_vs_bf16": round(ratio, 3),
+        "quality": {"token_match_vs_bf16": round(float(match), 4),
+                    "kv_quantization_error": err},
+    }
 
 
 def main():
@@ -103,6 +168,10 @@ def main():
     ap.add_argument("--rate", type=float, default=10.0,
                     help="mean arrival rate (req/s); 0 = all at once")
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--cache-spec", default=None,
+                    help="also compare paged KV cache modes at an equal byte "
+                         "budget: bf16 dense vs this MX scheme "
+                         "('fp4_e2m1', 'fp5_e2m2_b16_e8m0', ...)")
     ap.add_argument("--single-device", action="store_true",
                     help="skip the host mesh (no real collectives)")
     args = ap.parse_args()
@@ -118,15 +187,17 @@ def main():
           f"slots={args.slots} requests={args.requests} rate={args.rate}/s")
 
     records = [
-        run_policy("uncompressed", NO_COMPRESSION, model, params, mesh, args),
+        run_policy("uncompressed", NO_COMPRESSION, model, params, mesh, args)[0],
         run_policy("mx4-gather",
                    CompressionPolicy(spec=MXSpec.make("fp4_e2m1", 32, "e8m0")),
-                   model, params, mesh, args),
+                   model, params, mesh, args)[0],
     ]
+    result = {"config": vars(args), "tp": tp, "records": records}
+    if args.cache_spec and KVCacheSpec.parse(args.cache_spec).quantized:
+        result["cache_modes"] = compare_caches(model, params, mesh, args)
     OUT_DIR.mkdir(parents=True, exist_ok=True)
     out = OUT_DIR / "serve_throughput.json"
-    out.write_text(json.dumps({"config": vars(args), "tp": tp,
-                               "records": records}, indent=1))
+    out.write_text(json.dumps(result, indent=1))
     print(f"wrote {out}")
 
 

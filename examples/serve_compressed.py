@@ -1,6 +1,8 @@
 """Serve a small trained model through the continuous-batching engine,
 comparing TTFT and output quality with and without compressed TP
-communication under staggered request arrivals.
+communication under staggered request arrivals. The last row additionally
+stores the paged KV cache itself in MX wire format (``cache_spec=...`` —
+~4x the resident KV blocks per byte, see DESIGN.md §Quantized cache).
 
   PYTHONPATH=src python examples/serve_compressed.py
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -49,14 +51,17 @@ def main():
     tok = ByteTokenizer()
     prompt = tok.encode("def main():\n    ")
 
-    for name, policy in [
-        ("bf16", NO_COMPRESSION),
-        ("mx4-gather", CompressionPolicy(spec=MXSpec.make("fp4_e2m1", 32))),
+    for name, policy, cache_spec in [
+        ("bf16", NO_COMPRESSION, None),
+        ("mx4-gather", CompressionPolicy(spec=MXSpec.make("fp4_e2m1", 32)), None),
         ("mx4-two-phase", CompressionPolicy(spec=MXSpec.make("fp4_e2m1", 32),
-                                            variant="two_phase")),
+                                            variant="two_phase"), None),
+        ("mx4-kv-cache", CompressionPolicy(spec=MXSpec.make("fp4_e2m1", 32)),
+         "fp4_e2m1"),
     ]:
         ctx = make_context(mesh, None, policy=policy)
-        engine = Engine(model, state["params"], ctx, max_slots=4, max_len=192)
+        engine = Engine(model, state["params"], ctx, max_slots=4, max_len=192,
+                        cache_spec=cache_spec)
         engine.run([Request(prompt=prompt, max_new_tokens=2)])  # compile warmup
         # staggered arrivals: requests trickle in while earlier ones decode
         reqs = [Request(prompt=prompt, max_new_tokens=48, arrival_s=0.02 * i)
@@ -67,7 +72,8 @@ def main():
         s = engine.stats.summary()
         print(f"\n--- {name}: prefill TTFT {stats['median_s']*1e3:.1f} ms, "
               f"served TTFT p50 {s['ttft_p50_s']*1e3:.1f} ms, "
-              f"{s['tokens_per_s']:.1f} tok/s")
+              f"{s['tokens_per_s']:.1f} tok/s, "
+              f"kv pools {engine.kv_pool_bytes()/1e6:.2f} MB")
         print(f"completion: {text!r}")
 
 

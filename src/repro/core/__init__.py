@@ -1,11 +1,14 @@
 """Core library: the paper's contribution — MX-compressed TP collectives."""
-from repro.core.formats import ELEMENT_FORMATS, MXSpec, SCALE_FORMATS, spec_grid
+from repro.core.formats import (
+    ELEMENT_FORMATS, KVCacheSpec, MXSpec, SCALE_FORMATS, spec_grid,
+)
 from repro.core.mx import (
     MXCompressed,
     dequantize,
     fake_quantize,
     quantization_error,
     quantize,
+    wire_arrays_shape,
 )
 from repro.core.policy import CompressionPolicy, NO_COMPRESSION, PAPER_DEFAULT
 from repro.core.collectives import (
@@ -21,8 +24,10 @@ __all__ = [
     "ELEMENT_FORMATS",
     "SCALE_FORMATS",
     "MXSpec",
+    "KVCacheSpec",
     "spec_grid",
     "MXCompressed",
+    "wire_arrays_shape",
     "quantize",
     "dequantize",
     "fake_quantize",

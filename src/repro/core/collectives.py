@@ -11,6 +11,7 @@ live in ``repro.core.tp``.
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Optional
 
 import jax
@@ -28,6 +29,25 @@ __all__ = [
     "compressed_all_to_all",
     "psum_maybe_compressed",
 ]
+
+
+_DOWNGRADE_WARNED: set = set()
+
+
+def _variant_downgrade(reason: str, strict: bool) -> None:
+    """A requested two_phase reduction cannot run; raise under ``strict`` or
+    warn once per distinct reason (trace-time Python, so this is cheap)."""
+    msg = (
+        f"compressed_psum: variant='two_phase' requested but {reason}; "
+        "falling back to the gather variant. Plumb axis_size (the TP degree) "
+        "and ensure the feature dim is divisible by axis_size * block_size, "
+        "or set strict=False/strict_variant=False to accept the fallback."
+    )
+    if strict:
+        raise ValueError(msg)
+    if reason not in _DOWNGRADE_WARNED:
+        _DOWNGRADE_WARNED.add(reason)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
 
 
 def _codec(use_pallas: bool):
@@ -59,7 +79,7 @@ def compressed_all_gather(
     comp = quantize(x, spec)
     payload = lax.all_gather(comp.payload, axis_name)
     scales = lax.all_gather(comp.scales, axis_name)
-    return dequantize(MXCompressed(payload, scales), spec)
+    return dequantize(MXCompressed(payload, scales), spec).astype(x.dtype)
 
 
 def _compressed_psum_fwd(
@@ -108,6 +128,7 @@ def compressed_psum(
     accum_dtype=jnp.float32,
     variant: str = "gather",
     axis_size: int = 0,
+    strict: bool = False,
 ) -> jnp.ndarray:
     """The paper's compressed reduction for row-parallel TP layers.
 
@@ -128,9 +149,19 @@ def compressed_psum(
     """
     use_two_phase = (
         variant == "two_phase"
-        and partial.shape[-1] % (axis_size * spec.block_size) == 0
         and axis_size > 1
+        and partial.shape[-1] % (axis_size * spec.block_size) == 0
     )
+    if variant == "two_phase" and not use_two_phase:
+        if axis_size <= 1:
+            _variant_downgrade(
+                f"axis_size={axis_size} is not plumbed (need the TP degree)",
+                strict)
+        else:
+            _variant_downgrade(
+                f"feature dim {partial.shape[-1]} is not divisible by "
+                f"axis_size * block_size = {axis_size * spec.block_size}",
+                strict)
 
     @jax.custom_vjp
     def _psum(p):
@@ -244,4 +275,5 @@ def psum_maybe_compressed(
         accum_dtype=jnp.dtype(policy.accum_dtype),
         variant=policy.variant,
         axis_size=axis_size,
+        strict=policy.strict_variant,
     )

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -21,6 +21,7 @@ __all__ = [
     "ElementFormat",
     "ScaleFormat",
     "MXSpec",
+    "KVCacheSpec",
     "ELEMENT_FORMATS",
     "SCALE_FORMATS",
     "PAPER_VALUE_DTYPES",
@@ -200,6 +201,62 @@ class MXSpec:
 
     def wire_bits_per_value(self, n_values: int) -> float:
         return 8.0 * self.wire_bytes(n_values) / n_values
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheSpec:
+    """Storage format of the paged KV block pools (DESIGN.md §Quantized cache).
+
+    ``mx=None`` is the dense default: pools hold the engine's ``cache_dtype``
+    and the data path is bit-identical to the pre-quantization engine. With an
+    ``MXSpec``, pools hold the wire format (bit-packed payload + scale bytes),
+    quantized on append and dequantized inside paged decode attention.
+    """
+
+    mx: Optional[MXSpec] = None
+    use_pallas: bool = False  # fused Pallas dequant-attention on the read path
+
+    @property
+    def quantized(self) -> bool:
+        return self.mx is not None
+
+    @classmethod
+    def parse(cls, spec) -> "KVCacheSpec":
+        """Accept a KVCacheSpec, an MXSpec, None, or a CLI string: ``bf16`` /
+        ``none`` / ``dense`` => dense; an element-format name (``fp4_e2m1``)
+        => that format at block 32 / e8m0; a full ``<elem>_b<block>_<scale>``
+        spec name is parsed exactly."""
+        if spec is None:
+            return cls()
+        if isinstance(spec, cls):
+            return spec
+        if isinstance(spec, MXSpec):
+            return cls(mx=spec)
+        name = str(spec).lower()
+        if name in ("bf16", "bfloat16", "none", "dense", "fp32", "float32"):
+            return cls()
+        if name in ELEMENT_FORMATS:
+            return cls(mx=MXSpec.make(name, 32, "e8m0"))
+        for scale in SCALE_FORMATS:
+            suffix = f"_{scale}"
+            if name.endswith(suffix):
+                head = name[: -len(suffix)]
+                elem, _, block = head.rpartition("_b")
+                if elem in ELEMENT_FORMATS and block.isdigit():
+                    return cls(mx=MXSpec.make(elem, int(block), scale))
+        raise ValueError(
+            f"unknown KV cache spec {spec!r}: expected 'bf16', an element "
+            f"format ({', '.join(sorted(ELEMENT_FORMATS))}), or a full MX "
+            f"spec name like 'fp4_e2m1_b32_e8m0'"
+        )
+
+    def describe(self) -> str:
+        if not self.quantized:
+            return "dense"
+        return (
+            f"{self.mx.name} ({self.mx.effective_bits:.2f} eff bits, "
+            f"{self.mx.compression_ratio():.2f}x vs bf16)"
+        )
 
 
 # The configurations the paper converges on (Table 2 uses E5M0-equivalent

@@ -34,6 +34,7 @@ __all__ = [
     "codes_to_values",
     "fake_quantize",
     "quantization_error",
+    "wire_arrays_shape",
 ]
 
 

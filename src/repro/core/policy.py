@@ -33,6 +33,9 @@ class CompressionPolicy:
     keep_local_fp: bool = False            # keep own shard in full precision
     use_pallas: bool = False               # Pallas codec kernels vs pure jnp
     accum_dtype: str = "float32"           # reduction accumulator
+    strict_variant: bool = False           # raise (vs warn once) when a
+                                           # requested variant can't run and
+                                           # would silently downgrade
 
     @property
     def enabled(self) -> bool:

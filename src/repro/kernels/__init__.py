@@ -6,6 +6,8 @@ are that codec: mx_quant (compress), mx_dequant (+ fused dequant-reduce
 epilogue). ops.py holds the jit'd dispatch wrappers, ref.py the pure-jnp
 oracle the tests compare against (bit-exact).
 """
+from repro.kernels.mx_kv import paged_dequant_attention
 from repro.kernels.ops import mx_dequant_reduce, mx_dequantize, mx_quantize
 
-__all__ = ["mx_quantize", "mx_dequantize", "mx_dequant_reduce"]
+__all__ = ["mx_quantize", "mx_dequantize", "mx_dequant_reduce",
+           "paged_dequant_attention"]

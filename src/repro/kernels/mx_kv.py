@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: fused dequant + paged decode attention.
+
+The quantized paged KV cache (DESIGN.md §Quantized cache) stores each
+attention layer's block pools in MX wire format. The decode read path must
+dequantize a slot's gathered pages before attending; doing that as separate
+ops round-trips the dequantized fp32 K/V through HBM — exactly the cost the
+``mx_dequant_reduce`` epilogue avoids for collectives. This kernel is the
+cache-side mirror: one VMEM pass per slot that unpacks the wire pages,
+materializes K/V, and computes the masked GQA attention output, so dense
+K/V never leaves VMEM.
+
+Grid is one program per slot; per-slot lengths ride along as a (B, 1) int32
+array (scalar per block) for the causal / sliding-window mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import MXSpec
+from repro.kernels.mx_dequant import _dequant_tile
+
+__all__ = ["paged_dequant_attention"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, kp_ref, ks_ref, vp_ref, vs_ref, len_ref, out_ref, *,
+            spec: MXSpec, kv_heads: int, scale: float, window):
+    T = kp_ref.shape[1]
+    k = _dequant_tile(kp_ref[0], ks_ref[0], spec)            # (T, kv_dim) f32
+    v = _dequant_tile(vp_ref[0], vs_ref[0], spec)
+    q = q_ref[0].astype(jnp.float32)                         # (H, hd)
+    H, hd = q.shape
+    G = H // kv_heads
+    kh = k.reshape(T, kv_heads, hd)
+    vh = v.reshape(T, kv_heads, hd)
+    qg = q.reshape(kv_heads, G, hd)
+    scores = jax.lax.dot_general(
+        qg, kh, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32) * scale          # (KV, G, T)
+
+    length = len_ref[0, 0]
+    t_pos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, T), 2)
+    valid = t_pos <= length
+    if window is not None:
+        valid = valid & (t_pos > length - window)
+    scores = jnp.where(valid, scores, _NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jax.lax.dot_general(
+        p, vh, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)                  # (KV, G, hd)
+    out_ref[...] = out.reshape(1, H * hd).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "spec", "kv_heads", "scale", "window", "out_dtype", "interpret"))
+def paged_dequant_attention(
+    q: jnp.ndarray,            # (B, H, hd) one query per slot
+    k_payload: jnp.ndarray,    # (B, T, n_bytes) uint8 gathered wire pages
+    k_scales: jnp.ndarray,     # (B, T, n_blocks) uint8
+    v_payload: jnp.ndarray,
+    v_scales: jnp.ndarray,
+    lengths: jnp.ndarray,      # (B,) int32 per-slot current position
+    spec: MXSpec,
+    *,
+    kv_heads: int,
+    scale: float,
+    window=None,
+    out_dtype=jnp.float32,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused dequantize + masked GQA decode attention over wire-format pages.
+
+    Returns (B, H * hd). Numerically matches dequantize-then-attend in fp32
+    (same codec semantics as ``mx_dequantize_2d``; softmax in fp32).
+    """
+    B, H, hd = q.shape
+    T = k_payload.shape[1]
+    grid = (B,)
+    return pl.pallas_call(
+        functools.partial(_kernel, spec=spec, kv_heads=kv_heads,
+                          scale=scale, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, T, k_payload.shape[-1]), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, T, k_scales.shape[-1]), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, T, v_payload.shape[-1]), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, T, v_scales.shape[-1]), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H * hd), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H * hd), out_dtype),
+        interpret=interpret,
+    )(q, k_payload, k_scales, v_payload, v_scales,
+      lengths.reshape(B, 1).astype(jnp.int32))

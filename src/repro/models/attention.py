@@ -23,11 +23,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import mx
+from repro.core.formats import KVCacheSpec
+from repro.core.mx import MXCompressed
 from repro.core.tp import TPContext, column_linear, constrain, row_linear
 from repro.models.common import Initializer, apply_rope, init_linear, make_rope, rms_norm
 
 __all__ = ["init_attention", "KVCache", "init_cache", "attention",
-           "attention_specs", "paged_attention_decode"]
+           "attention_specs", "paged_attention_decode", "quantize_kv_pages"]
 
 NEG_INF = -1e30
 _Q_CHUNK = 1024
@@ -201,6 +204,21 @@ def attention(
     return y, cache
 
 
+def quantize_kv_pages(k: jnp.ndarray, v: jnp.ndarray, spec) -> tuple:
+    """Quantize dense K/V (..., kv_dim) into wire pages (payload+scales pairs
+    along the last axis) — the single append-path codec entry used by both
+    prefill-insert and the decode write."""
+    return mx.quantize(k, spec), mx.quantize(v, spec)
+
+
+def constrain_wire_pool(ctx: TPContext, pool: MXCompressed) -> MXCompressed:
+    """Pin a wire-format pool to the canonical sharding (packed features over
+    the model axis, like the dense pools). Used by every pool producer so the
+    decode jit always sees one input sharding and compiles exactly once."""
+    a = ctx.axis if ctx.tp else None
+    return MXCompressed(*(constrain(ctx, arr, None, None, a) for arr in pool))
+
+
 def paged_attention_decode(
     ctx: TPContext,
     params,
@@ -208,10 +226,11 @@ def paged_attention_decode(
     cfg: ModelConfig,
     *,
     lengths: jnp.ndarray,              # (B,) int32 per-slot write position
-    pool_k: jnp.ndarray,               # (n_blocks, block_size, kv_dim)
-    pool_v: jnp.ndarray,
+    pool_k,                            # (n_blocks, block_size, kv_dim) dense,
+    pool_v,                            #   or MXCompressed wire pools
     tables: jnp.ndarray,               # (B, max_blocks) int32 block ids
     window: Optional[int] = None,
+    cache_spec: Optional[KVCacheSpec] = None,
 ):
     """One decode step against a paged KV cache (DESIGN.md §Paged cache).
 
@@ -220,24 +239,66 @@ def paged_attention_decode(
     sequence via its block-table row, and attends with per-slot masks.
     Inactive slots point at the null block; their writes and reads are
     garbage but masked out by the engine. Returns (out, pool_k, pool_v).
+
+    With a quantized ``cache_spec`` the pools are ``MXCompressed`` wire
+    arrays: the new K/V is quantized before the scatter and the gathered
+    pages are dequantized on read — in pure jnp, or inside the fused Pallas
+    dequant-attention kernel when ``cache_spec.use_pallas`` is set.
     """
     B = x.shape[0]
     a = ctx.axis if ctx.tp else None
     positions = lengths[:, None]                                # (B, 1) RoPE
     q, k_new, v_new = _qkv(ctx, params, x, cfg, positions)
+    quantized = cache_spec is not None and cache_spec.quantized
 
-    bs = pool_k.shape[1]
+    bs = (pool_k.payload if quantized else pool_k).shape[1]
     block_ids = jnp.take_along_axis(tables, (lengths // bs)[:, None], axis=1)[:, 0]
     offs = lengths % bs
-    pool_k = pool_k.at[block_ids, offs].set(k_new[:, 0].astype(pool_k.dtype))
-    pool_v = pool_v.at[block_ids, offs].set(v_new[:, 0].astype(pool_v.dtype))
-    pool_k = constrain(ctx, pool_k, None, None, a)
-    pool_v = constrain(ctx, pool_v, None, None, a)
 
-    # (B, max_blocks, bs, kv) -> logical (B, T, kv); block j of a slot's
-    # table holds that slot's positions [j*bs, (j+1)*bs)
-    k_all = pool_k[tables].reshape(B, -1, cfg.kv_dim)
-    v_all = pool_v[tables].reshape(B, -1, cfg.kv_dim)
+    if quantized:
+        mxs = cache_spec.mx
+        kq, vq = quantize_kv_pages(k_new[:, 0], v_new[:, 0], mxs)
+        pool_k = MXCompressed(
+            payload=pool_k.payload.at[block_ids, offs].set(kq.payload),
+            scales=pool_k.scales.at[block_ids, offs].set(kq.scales))
+        pool_v = MXCompressed(
+            payload=pool_v.payload.at[block_ids, offs].set(vq.payload),
+            scales=pool_v.scales.at[block_ids, offs].set(vq.scales))
+        # every producer of wire pools (this decode write and the engine's
+        # prefill-insert) must constrain them to the SAME spec, or the
+        # decode jit sees a new input sharding on its second step and
+        # recompiles, breaking the engine's compile-once invariant
+        pool_k = constrain_wire_pool(ctx, pool_k)
+        pool_v = constrain_wire_pool(ctx, pool_v)
+
+        # gathered wire pages, logical (B, T, wire) like the dense layout
+        k_pl = pool_k.payload[tables].reshape(B, -1, pool_k.payload.shape[-1])
+        k_sc = pool_k.scales[tables].reshape(B, -1, pool_k.scales.shape[-1])
+        v_pl = pool_v.payload[tables].reshape(B, -1, pool_v.payload.shape[-1])
+        v_sc = pool_v.scales[tables].reshape(B, -1, pool_v.scales.shape[-1])
+        if cache_spec.use_pallas:
+            from repro.kernels.mx_kv import paged_dequant_attention
+
+            out = paged_dequant_attention(
+                q[:, 0], k_pl, k_sc, v_pl, v_sc, lengths, mxs,
+                kv_heads=cfg.n_kv_heads, scale=cfg.head_dim**-0.5,
+                window=window, out_dtype=q.dtype,
+                interpret=jax.default_backend() == "cpu")[:, None, :]
+            out = constrain(ctx, out, ctx.batch, None, a)
+            y = row_linear(ctx, out, params["wo"]["w"], n_tokens=B)
+            return y, pool_k, pool_v
+        k_all = mx.dequantize(MXCompressed(k_pl, k_sc), mxs, out_dtype=q.dtype)
+        v_all = mx.dequantize(MXCompressed(v_pl, v_sc), mxs, out_dtype=q.dtype)
+    else:
+        pool_k = pool_k.at[block_ids, offs].set(k_new[:, 0].astype(pool_k.dtype))
+        pool_v = pool_v.at[block_ids, offs].set(v_new[:, 0].astype(pool_v.dtype))
+        pool_k = constrain(ctx, pool_k, None, None, a)
+        pool_v = constrain(ctx, pool_v, None, None, a)
+
+        # (B, max_blocks, bs, kv) -> logical (B, T, kv); block j of a slot's
+        # table holds that slot's positions [j*bs, (j+1)*bs)
+        k_all = pool_k[tables].reshape(B, -1, cfg.kv_dim)
+        v_all = pool_v[tables].reshape(B, -1, cfg.kv_dim)
     k_all = constrain(ctx, k_all, ctx.batch, None, a)
     v_all = constrain(ctx, v_all, ctx.batch, None, a)
 

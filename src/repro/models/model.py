@@ -279,7 +279,8 @@ class Model:
         return logits, new_cache
 
     def decode_step_paged(self, ctx: TPContext, params, tokens, state,
-                          tables, lengths) -> Tuple[jnp.ndarray, Any]:
+                          tables, lengths,
+                          cache_spec=None) -> Tuple[jnp.ndarray, Any]:
         """Continuous-batching decode: tokens (B, 1) over B slots with
         PER-SLOT positions against the paged KV cache (see
         serving/kv_cache.py and DESIGN.md §Decode step).
@@ -287,7 +288,9 @@ class Model:
         state: pytree from ``init_paged_state`` (attention block pools,
         batched recurrent caches, optional per-slot encoder K/V);
         tables (B, max_blocks) int32; lengths (B,) int32 per-slot write
-        positions. Shapes are independent of which slots are live, so this
+        positions; cache_spec: static KVCacheSpec — quantized pools are
+        wire-format MXCompressed pairs (see DESIGN.md §Quantized cache).
+        Shapes are independent of which slots are live, so this
         compiles exactly once regardless of request arrivals/departures.
         Returns (logits (B, V), new_state).
         """
@@ -308,7 +311,7 @@ class Model:
                 out, pools_k[ai], pools_v[ai] = paged_attention_decode(
                     ctx, lp["core"], h, cfg, lengths=lengths,
                     pool_k=pools_k[ai], pool_v=pools_v[ai], tables=tables,
-                    window=spec.window)
+                    window=spec.window, cache_spec=cache_spec)
                 ai += 1
                 x = constrain(ctx, x + out, ctx.batch, None, None)
                 if _has_mlp_sublayer(cfg, spec):

@@ -1,7 +1,7 @@
 from repro.serving.engine import Engine, Request
 from repro.serving.kv_cache import (
-    BlockAllocator, cache_bytes, cache_specs, init_paged_state,
-    paged_cache_bytes,
+    BlockAllocator, cache_bytes, cache_specs, check_cache_spec,
+    init_paged_state, paged_cache_bytes,
 )
 from repro.serving.ttft import (
     HARDWARE, Hardware, RequestTiming, ServeStats, ttft_breakdown, ttft_seconds,
@@ -9,7 +9,8 @@ from repro.serving.ttft import (
 
 __all__ = [
     "Engine", "Request", "cache_bytes", "cache_specs",
-    "BlockAllocator", "init_paged_state", "paged_cache_bytes",
+    "BlockAllocator", "check_cache_spec", "init_paged_state",
+    "paged_cache_bytes",
     "HARDWARE", "Hardware", "RequestTiming", "ServeStats",
     "ttft_breakdown", "ttft_seconds",
 ]

@@ -22,10 +22,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.mx import MXCompressed
 from repro.core.policy import NO_COMPRESSION
 from repro.core.tp import TPContext
+from repro.models.attention import constrain_wire_pool, quantize_kv_pages
 from repro.models.model import Model
-from repro.serving.kv_cache import BlockAllocator, init_paged_state
+from repro.serving.kv_cache import (
+    BlockAllocator, check_cache_spec, init_paged_state, paged_cache_bytes,
+)
 from repro.serving.ttft import RequestTiming, ServeStats
 
 __all__ = ["Request", "Engine"]
@@ -76,7 +80,8 @@ class Engine:
                  max_len: int, batch_size: Optional[int] = None,
                  max_slots: Optional[int] = None, block_size: int = 16,
                  n_blocks: Optional[int] = None, cache_dtype=jnp.bfloat16,
-                 compress_decode: bool = False, donate_cache: bool = True):
+                 cache_spec=None, compress_decode: bool = False,
+                 donate_cache: bool = True):
         self.model = model
         self.cfg = model.cfg
         self.ctx = ctx
@@ -90,6 +95,10 @@ class Engine:
         # pass a smaller n_blocks to exercise eviction under memory pressure
         self.n_blocks = n_blocks or (self.n_slots * self.max_blocks + 1)
         self.cache_dtype = cache_dtype
+        # KV pool storage format: dense cache_dtype (default, bit-identical
+        # to the pre-quantization engine) or MX wire format (DESIGN.md
+        # §Quantized cache). Accepts a KVCacheSpec or a CLI string.
+        self.cache_spec = check_cache_spec(self.cfg, cache_spec)
         self.stats = ServeStats()
 
         # right-padding to a bucket is only sound when every layer is
@@ -105,9 +114,11 @@ class Engine:
 
         donate = (2,) if donate_cache else ()
         self._insert_donate = (0,) if donate_cache else ()
+        cache_spec = self.cache_spec  # closed over statically by the jit
         self._decode = jax.jit(
             lambda p, toks, state, tables, lengths: model.decode_step_paged(
-                self.ctx_decode, p, toks, state, tables, lengths),
+                self.ctx_decode, p, toks, state, tables, lengths,
+                cache_spec=cache_spec),
             donate_argnums=donate)
         self._sample = jax.jit(self._sample_impl)
         self._prefill_fns: Dict[int, tuple] = {}
@@ -118,7 +129,8 @@ class Engine:
     def _reset(self) -> None:
         self.allocator = BlockAllocator(self.n_blocks)
         self._state = init_paged_state(self.cfg, self.n_slots, self.n_blocks,
-                                       self.block_size, self.cache_dtype)
+                                       self.block_size, self.cache_dtype,
+                                       cache_spec=self.cache_spec)
         self._tables = np.zeros((self.n_slots, self.max_blocks), np.int32)
         self._lengths = np.zeros((self.n_slots,), np.int32)
         self._cur = np.zeros((self.n_slots,), np.int32)
@@ -129,6 +141,14 @@ class Engine:
         """Compiled-variant count of the batched decode step (jit-stability
         witness: stays 1 however requests arrive and leave)."""
         return self._decode._cache_size()
+
+    def kv_pool_bytes(self) -> int:
+        """Device bytes held by this engine's attention KV pools (payload +
+        scales for quantized pools, dense dtype bytes otherwise)."""
+        return paged_cache_bytes(
+            self.cfg, self.n_blocks, self.block_size,
+            dtype_bytes=jnp.dtype(self.cache_dtype).itemsize,
+            cache_spec=self.cache_spec)
 
     # ------------------------------------------------------- shape bucketing
 
@@ -164,8 +184,11 @@ class Engine:
 
     def _make_insert(self, nb: int, total: int):
         """Jitted prefill-insert: scatter a single-request dense prefill cache
-        into the slot's allocated blocks / batched recurrent state rows."""
+        into the slot's allocated blocks / batched recurrent state rows.
+        Quantized pools get the same scatter in wire format: the dense prefill
+        K/V is MX-quantized per position before the block write."""
         bs, cfg = self.block_size, self.cfg
+        cache_spec = self.cache_spec
         pad = nb * bs - total
 
         def insert(state, layer_caches, cross, slot, block_ids):
@@ -178,10 +201,19 @@ class Engine:
                 if spec.kind == "attn":
                     k = jnp.pad(c.k[0], ((0, pad), (0, 0))).reshape(nb, bs, -1)
                     v = jnp.pad(c.v[0], ((0, pad), (0, 0))).reshape(nb, bs, -1)
-                    pools_k[ai] = pools_k[ai].at[block_ids].set(
-                        k.astype(pools_k[ai].dtype))
-                    pools_v[ai] = pools_v[ai].at[block_ids].set(
-                        v.astype(pools_v[ai].dtype))
+                    if cache_spec.quantized:
+                        kq, vq = quantize_kv_pages(k, v, cache_spec.mx)
+                        pools_k[ai] = constrain_wire_pool(self.ctx, MXCompressed(
+                            payload=pools_k[ai].payload.at[block_ids].set(kq.payload),
+                            scales=pools_k[ai].scales.at[block_ids].set(kq.scales)))
+                        pools_v[ai] = constrain_wire_pool(self.ctx, MXCompressed(
+                            payload=pools_v[ai].payload.at[block_ids].set(vq.payload),
+                            scales=pools_v[ai].scales.at[block_ids].set(vq.scales)))
+                    else:
+                        pools_k[ai] = pools_k[ai].at[block_ids].set(
+                            k.astype(pools_k[ai].dtype))
+                        pools_v[ai] = pools_v[ai].at[block_ids].set(
+                            v.astype(pools_v[ai].dtype))
                     ai += 1
                 else:
                     rec[ri] = jax.tree.map(

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import LayerSpec, ModelConfig
+from repro.core.formats import KVCacheSpec
+from repro.core.mx import MXCompressed, wire_arrays_shape
 from repro.core.tp import TPContext
 from repro.models.attention import KVCache
 from repro.models.ssm import MambaCache
@@ -28,7 +30,7 @@ from repro.models.xlstm import MLSTMCache, SLSTMCache
 __all__ = [
     "cache_bytes", "cache_specs", "layer_cache_len", "ring_positions",
     "BlockAllocator", "NULL_BLOCK", "attn_layer_count", "init_paged_state",
-    "paged_cache_bytes",
+    "paged_cache_bytes", "check_cache_spec",
 ]
 
 NULL_BLOCK = 0  # reserved scratch block: never allocated, absorbs masked writes
@@ -114,6 +116,7 @@ class BlockAllocator:
         assert n_blocks >= 2, "need at least one allocatable block"
         self.n_blocks = n_blocks
         self._free = collections.deque(range(1, n_blocks))
+        self._free_set = set(self._free)  # O(1) double-free detection
         self.high_water = 0  # max blocks simultaneously allocated (stats)
 
     @property
@@ -129,33 +132,88 @@ class BlockAllocator:
         if n > len(self._free):
             return None
         ids = [self._free.popleft() for _ in range(n)]
+        self._free_set.difference_update(ids)
         self.high_water = max(self.high_water, self.n_allocated)
         return ids
 
     def free(self, ids: List[int]) -> None:
-        self._free.extend(ids)
+        """Return blocks to the free list.
+
+        A scheduler bug that frees a block twice (or frees the reserved null
+        block / a garbage id) would silently hand the same block to two
+        requests, corrupting both of their KV sequences — so every id is
+        validated before any state changes.
+        """
+        checked = []
+        for b in ids:
+            b = int(b)
+            if b == NULL_BLOCK:
+                raise ValueError("free of reserved NULL_BLOCK (block 0)")
+            if not 0 < b < self.n_blocks:
+                raise ValueError(
+                    f"free of out-of-range block id {b} (pool has "
+                    f"{self.n_blocks} blocks)")
+            if b in self._free_set or b in checked:
+                raise ValueError(f"double free of block {b}")
+            checked.append(b)
+        self._free_set.update(checked)
+        self._free.extend(checked)
 
 
 def attn_layer_count(cfg: ModelConfig) -> int:
     return sum(1 for spec in cfg.layers if spec.kind == "attn")
 
 
+def _wire_pool(n_blocks: int, block_size: int, kv_dim: int,
+               cache_spec: KVCacheSpec) -> MXCompressed:
+    """One quantized block pool: per-position bit-packed payload + scale
+    bytes, shapes from ``wire_arrays_shape`` over the (blocks, pos, kv_dim)
+    dense layout. Raw scale byte 0 decodes to 2**-bias, so zero-initialized
+    pools dequantize to (near-)zero exactly like zeroed dense pools."""
+    p_shape, s_shape = wire_arrays_shape(
+        (n_blocks, block_size, kv_dim), cache_spec.mx)
+    return MXCompressed(payload=jnp.zeros(p_shape, jnp.uint8),
+                        scales=jnp.zeros(s_shape, jnp.uint8))
+
+
+def check_cache_spec(cfg: ModelConfig, cache_spec: KVCacheSpec) -> KVCacheSpec:
+    """Validate a (possibly stringy) cache spec against the model geometry."""
+    cache_spec = KVCacheSpec.parse(cache_spec)
+    if cache_spec.quantized and cfg.kv_dim % cache_spec.mx.block_size != 0:
+        raise ValueError(
+            f"cache spec {cache_spec.mx.name}: kv_dim={cfg.kv_dim} is not "
+            f"divisible by MX block size {cache_spec.mx.block_size}; pick a "
+            f"smaller block (e.g. 'fp4_e2m1_b8_e8m0')")
+    return cache_spec
+
+
 def init_paged_state(cfg: ModelConfig, n_slots: int, n_blocks: int,
-                     block_size: int, dtype=jnp.bfloat16) -> dict:
+                     block_size: int, dtype=jnp.bfloat16,
+                     cache_spec: Optional[KVCacheSpec] = None) -> dict:
     """Device-side continuous-batching cache state.
 
     ``pools_k``/``pools_v``: one ``(n_blocks, block_size, kv_dim)`` pool per
-    attention layer. ``rec``: batched recurrent caches (one entry per
-    non-attention layer, in layer order). ``cross_k``/``cross_v``: per-layer
+    attention layer — dense at ``dtype`` by default, or MX wire-format
+    (``MXCompressed`` payload/scale pairs, see DESIGN.md §Quantized cache)
+    when ``cache_spec`` is quantized. ``rec``: batched recurrent caches (one
+    entry per non-attention layer, in layer order; always dense — recurrent
+    state is O(slots), not O(tokens)). ``cross_k``/``cross_v``: per-layer
     per-slot encoder K/V for encoder-decoder models.
     """
     from repro.models.transformer import init_layer_cache
 
+    cache_spec = check_cache_spec(cfg, cache_spec)
     pools_k, pools_v, rec = [], [], []
     for spec in cfg.layers:
         if spec.kind == "attn":
-            pools_k.append(jnp.zeros((n_blocks, block_size, cfg.kv_dim), dtype))
-            pools_v.append(jnp.zeros((n_blocks, block_size, cfg.kv_dim), dtype))
+            if cache_spec.quantized:
+                pools_k.append(_wire_pool(n_blocks, block_size, cfg.kv_dim,
+                                          cache_spec))
+                pools_v.append(_wire_pool(n_blocks, block_size, cfg.kv_dim,
+                                          cache_spec))
+            else:
+                pools_k.append(jnp.zeros((n_blocks, block_size, cfg.kv_dim), dtype))
+                pools_v.append(jnp.zeros((n_blocks, block_size, cfg.kv_dim), dtype))
         else:
             rec.append(init_layer_cache(cfg, spec, n_slots, 0, dtype))
     state = {"pools_k": pools_k, "pools_v": pools_v, "rec": rec}
@@ -167,6 +225,16 @@ def init_paged_state(cfg: ModelConfig, n_slots: int, n_blocks: int,
 
 
 def paged_cache_bytes(cfg: ModelConfig, n_blocks: int, block_size: int,
-                      dtype_bytes: int = 2) -> int:
-    """Device bytes held by the paged pools (the engine's KV budget)."""
-    return 2 * attn_layer_count(cfg) * n_blocks * block_size * cfg.kv_dim * dtype_bytes
+                      dtype_bytes: int = 2,
+                      cache_spec: Optional[KVCacheSpec] = None) -> int:
+    """Device bytes held by the paged pools (the engine's KV budget).
+
+    Dense pools cost ``kv_dim * dtype_bytes`` per position; quantized pools
+    cost the wire bytes (bit-packed payload + one scale byte per MX block).
+    """
+    cache_spec = KVCacheSpec.parse(cache_spec)
+    if cache_spec.quantized:
+        pos_bytes = cache_spec.mx.wire_bytes(cfg.kv_dim)
+    else:
+        pos_bytes = cfg.kv_dim * dtype_bytes
+    return 2 * attn_layer_count(cfg) * n_blocks * block_size * pos_bytes

@@ -158,6 +158,89 @@ def test_ste_gradient_flows_through_compressed_psum():
     """)
 
 
+# -------------------------------------------------- single-process checks
+# (a 1-device mesh gives real axis semantics without the subprocess cost)
+
+
+def _one_device_island(fn, out_extra_dim=False):
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    mesh = compat.make_mesh((1,), ("model",))
+    out_specs = P(*((None,) * (3 + int(out_extra_dim))))
+    return compat.shard_map(fn, mesh=mesh, in_specs=P(None, None, None),
+                            out_specs=out_specs, axis_names={"model"},
+                            check_vma=False)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("dtype", ["bfloat16", "float16"])
+def test_compressed_all_gather_preserves_dtype(use_pallas, dtype):
+    """Regression: compressed_all_gather leaked the dequantizer's fp32
+    instead of casting back to x.dtype (unlike compressed_psum /
+    compressed_all_to_all) — over both the jnp and Pallas codecs."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.collectives import compressed_all_gather
+    from repro.core.formats import MXSpec
+
+    spec = MXSpec.make("fp4_e2m1", 32, "e8m0")
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 8, 64)),
+                    jnp.dtype(dtype))
+    f = _one_device_island(
+        lambda xl: compressed_all_gather(xl, "model", spec,
+                                         use_pallas=use_pallas),
+        out_extra_dim=True)
+    y = jax.jit(f)(x)
+    assert y.dtype == x.dtype, (y.dtype, x.dtype)
+    assert y.shape == (1, *x.shape)
+
+
+def test_two_phase_downgrade_warns_once_and_strict_raises():
+    """variant='two_phase' with axis_size unplumbed (or a non-dividing
+    feature dim) must not silently run the gather variant: warn once, or
+    raise when strict."""
+    import warnings
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import collectives
+    from repro.core.collectives import compressed_psum
+    from repro.core.formats import MXSpec
+
+    spec = MXSpec.make("fp4_e2m1", 32, "e8m0")
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 8, 64)),
+                    jnp.float32)
+
+    # strict: raises at trace time, before any collective is issued
+    with pytest.raises(ValueError, match="two_phase"):
+        compressed_psum(x, "model", spec, variant="two_phase", axis_size=0,
+                        strict=True)
+
+    collectives._DOWNGRADE_WARNED.clear()
+    f = _one_device_island(
+        lambda xl: compressed_psum(xl, "model", spec, variant="two_phase",
+                                   axis_size=0))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        jax.jit(f)(x).block_until_ready()
+    assert any("two_phase" in str(w.message) for w in caught), caught
+    # warned once per distinct reason: a second trace stays quiet
+    with warnings.catch_warnings(record=True) as caught2:
+        warnings.simplefilter("always")
+        g = _one_device_island(
+            lambda xl: compressed_psum(xl * 2, "model", spec,
+                                       variant="two_phase", axis_size=0))
+        jax.jit(g)(x).block_until_ready()
+    assert not any("two_phase" in str(w.message) for w in caught2), caught2
+
+
 def test_compressed_all_gather_roundtrip():
     run_case("""
     from repro.core.collectives import compressed_all_gather

@@ -152,11 +152,49 @@ def test_block_freelist_reuse_after_eviction(small_model):
     assert tiny.stats.summary()["n_preemptions"] >= 1
     assert tiny.allocator.n_free == tiny.n_blocks - 1  # all blocks returned
     assert tiny.allocator.high_water <= tiny.n_blocks - 1
+    # conservation through the preempt-readmit-finish cycle: every id is
+    # back exactly once, none lost, none duplicated, null block never listed
+    free_ids = list(tiny.allocator._free)
+    assert sorted(free_ids) == list(range(1, tiny.n_blocks))
+    assert tiny.allocator._free_set == set(free_ids)
     big = Engine(model, params, CTX, max_slots=2, max_len=64,
                  cache_dtype=jnp.float32)
     ref = big.run(mk())
     for a, b in zip(out, ref):
         np.testing.assert_array_equal(a.output, b.output)
+
+
+# ---------------------------------------------------- allocator invariants
+
+
+def test_allocator_rejects_double_free():
+    from repro.serving import BlockAllocator
+
+    a = BlockAllocator(8)
+    ids = a.alloc(3)
+    a.free(ids[:1])
+    with pytest.raises(ValueError, match="double free"):
+        a.free(ids[:1])
+    with pytest.raises(ValueError, match="double free"):
+        a.free([ids[1], ids[1]])  # duplicate within one call
+    # failed frees must not have corrupted state
+    a.free(ids[1:])
+    assert a.n_free == 7 and a.n_allocated == 0
+
+
+def test_allocator_rejects_null_and_out_of_range():
+    from repro.serving import BlockAllocator
+
+    a = BlockAllocator(8)
+    ids = a.alloc(2)
+    with pytest.raises(ValueError, match="NULL_BLOCK"):
+        a.free([0])
+    with pytest.raises(ValueError, match="out-of-range"):
+        a.free([8])
+    with pytest.raises(ValueError, match="out-of-range"):
+        a.free([-1])
+    a.free(ids)
+    assert a.n_free == 7
 
 
 def test_continuous_engine_hybrid_arch():

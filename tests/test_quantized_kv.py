@@ -1,0 +1,222 @@
+"""MX-quantized paged KV cache: spec parsing, wire pool accounting, decode
+parity with the dense cache (within the spec's measured quantization error),
+and the fused Pallas dequant-attention kernel vs the pure-jnp read path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mx
+from repro.core.formats import KVCacheSpec, MXSpec
+from repro.core.mx import MXCompressed, wire_arrays_shape
+from repro.core.tp import TPContext
+from repro.models.attention import paged_attention_decode
+from repro.models.model import Model
+from repro.serving import Engine, Request, init_paged_state, paged_cache_bytes
+from repro.serving.kv_cache import check_cache_spec
+from tests.conftest import fp32_reduced
+
+CTX = TPContext(mesh=None)
+
+
+# ------------------------------------------------------------ spec plumbing
+
+
+def test_kv_cache_spec_parse():
+    assert not KVCacheSpec.parse(None).quantized
+    assert not KVCacheSpec.parse("bf16").quantized
+    assert not KVCacheSpec.parse("none").quantized
+    s = KVCacheSpec.parse("fp4_e2m1")
+    assert s.quantized and s.mx.elem.name == "fp4_e2m1"
+    assert s.mx.block_size == 32 and s.mx.scale.name == "e8m0"
+    full = KVCacheSpec.parse("fp5_e2m2_b16_e4m0")
+    assert (full.mx.elem.name, full.mx.block_size, full.mx.scale.name) == (
+        "fp5_e2m2", 16, "e4m0")
+    # idempotent over already-parsed values
+    assert KVCacheSpec.parse(s) is s
+    assert KVCacheSpec.parse(MXSpec.make("int4", 8)).mx.block_size == 8
+    with pytest.raises(ValueError):
+        KVCacheSpec.parse("fp17_nope")
+
+
+def test_cache_spec_geometry_validation():
+    cfg = fp32_reduced("internlm2-1.8b")  # kv_dim = 128
+    assert check_cache_spec(cfg, "fp4_e2m1").quantized
+    with pytest.raises(ValueError, match="not.*divisible|divisible"):
+        check_cache_spec(cfg, KVCacheSpec(mx=MXSpec.make("fp4_e2m1", 48)))
+
+
+def test_wire_pool_shapes_and_bytes():
+    cfg = fp32_reduced("internlm2-1.8b")
+    spec = KVCacheSpec.parse("fp4_e2m1")
+    state = init_paged_state(cfg, 2, 5, 16, jnp.float32, cache_spec=spec)
+    p_shape, s_shape = wire_arrays_shape((5, 16, cfg.kv_dim), spec.mx)
+    for pool in state["pools_k"] + state["pools_v"]:
+        assert isinstance(pool, MXCompressed)
+        assert pool.payload.shape == p_shape and pool.payload.dtype == jnp.uint8
+        assert pool.scales.shape == s_shape and pool.scales.dtype == jnp.uint8
+    # equal-count pools: wire bytes ~3.76x below bf16 for fp4/b32/e8m0
+    dense_b = paged_cache_bytes(cfg, 5, 16, dtype_bytes=2)
+    wire_b = paged_cache_bytes(cfg, 5, 16, cache_spec=spec)
+    assert dense_b / wire_b > 3.7
+    # and exactly payload + scales
+    n_attn = sum(1 for s in cfg.layers if s.kind == "attn")
+    per_pos = cfg.kv_dim // 2 + cfg.kv_dim // 32
+    assert wire_b == 2 * n_attn * 5 * 16 * per_pos
+
+
+# ------------------------------------------------------- decode-path parity
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = fp32_reduced("internlm2-1.8b")
+    model = Model(cfg)
+    return cfg, model, model.init_params(jax.random.PRNGKey(0))
+
+
+def _paged_states(cfg, spec, n_blocks=9, bs=16, n_slots=2, seed=0):
+    """Dense + wire paged states holding the SAME random K/V."""
+    rng = np.random.default_rng(seed)
+    dense = init_paged_state(cfg, n_slots, n_blocks, bs, jnp.float32)
+    quant = init_paged_state(cfg, n_slots, n_blocks, bs, jnp.float32,
+                             cache_spec=spec)
+    for i in range(len(dense["pools_k"])):
+        for key in ("pools_k", "pools_v"):
+            kv = jnp.asarray(rng.normal(size=(n_blocks, bs, cfg.kv_dim)),
+                             jnp.float32)
+            dense[key][i] = kv
+            quant[key][i] = mx.quantize(kv, spec.mx)
+    return dense, quant
+
+
+def test_decode_parity_quantized_vs_dense_within_error_bound(small_model):
+    """Quantized-cache decode logits match the dense cache within the spec's
+    MEASURED quantization error on the cached K/V (attention + MLP do not
+    amplify the codec noise)."""
+    cfg, model, params = small_model
+    spec = KVCacheSpec.parse("fp4_e2m1")
+    dense, quant = _paged_states(cfg, spec)
+    tables = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], jnp.int32)
+    lengths = jnp.asarray([37, 52], jnp.int32)
+    toks = jnp.asarray([[3], [7]], jnp.int32)
+    ld, _ = model.decode_step_paged(CTX, params, toks, dense, tables, lengths)
+    lq, _ = model.decode_step_paged(CTX, params, toks, quant, tables, lengths,
+                                    cache_spec=spec)
+    rel = float(jnp.linalg.norm(lq - ld) / jnp.linalg.norm(ld))
+    kv_rel = float(mx.quantization_error(dense["pools_k"][0], spec.mx)["rel_l2"])
+    assert 0.0 < rel < 2.0 * kv_rel, (rel, kv_rel)
+
+
+def test_fused_pallas_read_path_matches_jnp(small_model):
+    """cache_spec.use_pallas routes reads through the fused dequant-attention
+    kernel; outputs must match the dequantize-then-attend jnp path."""
+    cfg, model, params = small_model
+    spec = KVCacheSpec.parse("fp4_e2m1")
+    _, quant = _paged_states(cfg, spec)
+    tables = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], jnp.int32)
+    lengths = jnp.asarray([37, 52], jnp.int32)
+    lp = params["layers"][0]
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(2, 1, cfg.d_model)),
+                    jnp.float32)
+    args = dict(lengths=lengths, pool_k=quant["pools_k"][0],
+                pool_v=quant["pools_v"][0], tables=tables)
+    y_jnp, pk_jnp, pv_jnp = paged_attention_decode(
+        CTX, lp["core"], x, cfg, cache_spec=spec, **args)
+    y_pal, pk_pal, pv_pal = paged_attention_decode(
+        CTX, lp["core"], x, cfg,
+        cache_spec=dataclasses.replace(spec, use_pallas=True), **args)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_jnp),
+                               rtol=2e-4, atol=2e-5)
+    # the write path is identical (same codec): wire pools must be bit-equal
+    np.testing.assert_array_equal(np.asarray(pk_pal.payload),
+                                  np.asarray(pk_jnp.payload))
+    np.testing.assert_array_equal(np.asarray(pv_pal.scales),
+                                  np.asarray(pv_jnp.scales))
+
+
+# ------------------------------------------------------------- engine level
+
+
+def test_engine_quantized_cache_end_to_end(small_model):
+    """The quantized-cache engine serves requests end-to-end: the first
+    sampled token comes from full-precision prefill (so it matches the dense
+    cache exactly); later tokens decode against wire-format pools; free-list
+    and jit-stability invariants hold."""
+    cfg, model, params = small_model
+    mk = lambda: [Request(prompt=np.arange(9 + i, dtype=np.int32)
+                          % cfg.vocab_size, max_new_tokens=6)
+                  for i in range(2)]
+    dense = Engine(model, params, CTX, max_slots=2, max_len=64,
+                   cache_dtype=jnp.float32)
+    out_d = dense.run(mk())
+    quant = Engine(model, params, CTX, max_slots=2, max_len=64,
+                   cache_dtype=jnp.float32, cache_spec="fp4_e2m1")
+    out_q = quant.run(mk())
+    for d, q in zip(out_d, out_q):
+        assert q.output.shape == (6,)
+        assert q.output[0] == d.output[0]  # prefill is full precision
+    assert quant.decode_cache_size() == 1
+    assert quant.allocator.n_free == quant.n_blocks - 1
+    # wire pools are ~3.76x smaller than bf16 (7.5x vs these fp32 pools)
+    assert dense.kv_pool_bytes() / quant.kv_pool_bytes() > 7.0
+
+
+def test_quantized_decode_compiles_once_multidevice():
+    """Regression: under a real TP mesh the wire pools' sharding must be
+    pinned identically by every producer (prefill-insert and the decode
+    write), or the decode jit recompiles on its second step. Subprocess so
+    the main pytest process keeps its single-device view."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config, reduced_config
+        from repro.core.policy import NO_COMPRESSION
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.sharding import make_context
+        from repro.models.model import Model
+        from repro.serving import Engine, Request
+
+        cfg = dataclasses.replace(reduced_config(get_config("internlm2-1.8b")),
+                                  dtype="float32")
+        model = Model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        ctx = make_context(make_host_mesh(), None, policy=NO_COMPRESSION)
+        eng = Engine(model, params, ctx, max_slots=2, max_len=48,
+                     cache_dtype=jnp.float32, cache_spec="fp4_e2m1")
+        eng.run([Request(prompt=np.arange(9, dtype=np.int32),
+                         max_new_tokens=4) for _ in range(2)])
+        assert eng.decode_cache_size() == 1, eng.decode_cache_size()
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=env, cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert proc.returncode == 0, (
+        f"STDOUT:{proc.stdout}\nSTDERR:{proc.stderr[-3000:]}")
+
+
+def test_engine_quantized_cache_survives_eviction(small_model):
+    """Preempt-readmit-finish with wire-format pools: readmission re-prefills
+    and re-quantizes into freshly allocated blocks; the free list is conserved
+    and stays duplicate-free."""
+    cfg, model, params = small_model
+    eng = Engine(model, params, CTX, max_slots=2, max_len=64, block_size=16,
+                 n_blocks=7, cache_dtype=jnp.float32, cache_spec="fp4_e2m1")
+    out = eng.run([Request(prompt=np.arange(20, dtype=np.int32),
+                           max_new_tokens=30) for _ in range(2)])
+    assert eng.stats.summary()["n_preemptions"] >= 1
+    for r in out:
+        assert r.output.shape == (30,)
+    assert eng.allocator.n_free == eng.n_blocks - 1
+    assert len(set(eng.allocator._free)) == len(eng.allocator._free)
+    assert eng.allocator._free_set == set(eng.allocator._free)
