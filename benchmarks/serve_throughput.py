@@ -23,10 +23,17 @@ under load) and the report carries a quality column — per-request token
 match rate against the bf16-cache outputs plus the spec's measured
 quantization error on the actual K/V distribution.
 
+With ``--prefill-chunk`` the run adds the scheduling-side comparison:
+whole-prompt prefill (head-of-line blocking: every running decode stalls for
+the full prompt) vs Sarathi-style chunked prefill interleaved with decode,
+reporting the inter-token-latency (TPOT) tail each produces under the same
+traffic in each cache mode.
+
   PYTHONPATH=src python benchmarks/serve_throughput.py
   PYTHONPATH=src python benchmarks/serve_throughput.py --requests 12 \
       --slots 4 --prompt-len 96 --new-tokens 24 --rate 20
-  PYTHONPATH=src python benchmarks/serve_throughput.py --cache-spec fp4_e2m1
+  PYTHONPATH=src python benchmarks/serve_throughput.py --cache-spec fp4_e2m1 \
+      --prefill-chunk 16
 """
 import argparse
 import dataclasses
@@ -63,12 +70,14 @@ def build_requests(n, prompt_len, new_tokens, rate_hz, vocab, seed=0):
 
 
 def run_policy(name, policy, model, params, mesh, args, *,
-               cache_spec=None, n_blocks=None, cache_dtype=jnp.float32):
+               cache_spec=None, n_blocks=None, cache_dtype=jnp.float32,
+               prefill_chunk=None):
     ctx = make_context(mesh, None, policy=policy)
     engine = Engine(model, params, ctx, max_slots=args.slots,
                     max_len=args.prompt_len + args.new_tokens,
                     block_size=args.block_size, cache_dtype=cache_dtype,
-                    cache_spec=cache_spec, n_blocks=n_blocks)
+                    cache_spec=cache_spec, n_blocks=n_blocks,
+                    prefill_chunk=prefill_chunk)
     reqs = build_requests(args.requests, args.prompt_len, args.new_tokens,
                           args.rate, model.cfg.vocab_size)
     # warmup run compiles prefill bucket + decode step outside the timed run
@@ -97,11 +106,19 @@ def run_policy(name, policy, model, params, mesh, args, *,
             "per_request": [round(t, 2) for t in ttft_ms],
         },
         "latency_p50_ms": round(s["latency_p50_s"] * 1e3, 2),
+        "tpot_ms": {
+            "p50": round(s["tpot_p50_s"] * 1e3, 2),
+            "p95": round(s["tpot_p95_s"] * 1e3, 2),
+            "samples": s["n_inter_token_samples"],
+        },
         "preemptions": s["n_preemptions"],
+        "prefill_chunk": engine.prefill_chunk,
         "decode_compilations": engine.decode_cache_size(),
+        "prefill_compilations": engine.prefill_cache_size(),
     }
-    print(f"{name:14s} ttft p50={record['ttft_ms']['p50']:8.1f} ms "
+    print(f"{name:18s} ttft p50={record['ttft_ms']['p50']:8.1f} ms "
           f"p90={record['ttft_ms']['p90']:8.1f} ms  "
+          f"tpot p95={record['tpot_ms']['p95']:7.2f} ms  "
           f"tokens/s={record['tokens_per_s']:7.1f}  "
           f"preempt={record['preemptions']}")
     return record, [r.output for r in reqs], engine
@@ -128,7 +145,7 @@ def compare_caches(model, params, mesh, args):
 
     base_rec, base_out, base_eng = run_policy(
         "kv-bf16", NO_COMPRESSION, model, params, mesh, args,
-        cache_dtype=jnp.bfloat16)
+        cache_dtype=jnp.bfloat16, prefill_chunk=args.prefill_chunk)
     # measured codec error on the K/V distribution the run actually produced
     kv_sample = jnp.concatenate(
         [p[1:].reshape(-1, cfg.kv_dim).astype(jnp.float32)
@@ -137,7 +154,8 @@ def compare_caches(model, params, mesh, args):
 
     quant_rec, quant_out, _ = run_policy(
         f"kv-{spec.mx.name}", NO_COMPRESSION, model, params, mesh, args,
-        cache_spec=spec, n_blocks=n_quant, cache_dtype=jnp.bfloat16)
+        cache_spec=spec, n_blocks=n_quant, cache_dtype=jnp.bfloat16,
+        prefill_chunk=args.prefill_chunk)
 
     match = np.mean([np.mean(q[:len(b)] == b[:len(q)])
                      for q, b in zip(quant_out, base_out)])
@@ -158,6 +176,65 @@ def compare_caches(model, params, mesh, args):
     }
 
 
+def compare_prefill_modes(model, params, mesh, args):
+    """Head-of-line-blocking comparison: whole-prompt vs chunked prefill
+    under the SAME long-prefill + decode Poisson traffic, in each requested
+    cache mode. Whole-prompt prefill stalls every running decode for the
+    full prompt; chunked prefill bounds the stall to one ``prefill_chunk``
+    slice, which shows up as a lower inter-token-latency (TPOT) tail at (on
+    dense pools) identical per-request outputs. Also witnesses the compile
+    story: the chunk program compiles exactly once regardless of the
+    prompt-length mix.
+
+    Prompts come from ``--hol-prompt-len`` (default 512), NOT the headline
+    ``--prompt-len``: the stall only matters when a whole-prompt prefill
+    dominates a decode step, i.e. for genuinely long prefills — at toy
+    prompt lengths every paged program costs about the same (dispatch +
+    collectives dominate) and chunking only adds steps.
+    """
+    plen = args.hol_prompt_len
+    chunk = args.prefill_chunk or max(args.block_size, plen // 4)
+    args = argparse.Namespace(**{**vars(args), "prompt_len": plen})
+    cache_modes = [("bf16", None)]
+    if args.cache_spec and KVCacheSpec.parse(args.cache_spec).quantized:
+        spec = KVCacheSpec.parse(args.cache_spec)
+        cache_modes.append((spec.mx.name, spec))
+    print(f"\n-- prefill modes: whole-prompt vs chunked "
+          f"(prompts={plen} tokens, chunk={chunk} tokens/step) --")
+    out = []
+    for cname, cspec in cache_modes:
+        rec_w, out_w, eng_w = run_policy(
+            f"{cname}/whole", NO_COMPRESSION, model, params, mesh, args,
+            cache_spec=cspec, prefill_chunk=0)
+        rec_c, out_c, eng_c = run_policy(
+            f"{cname}/chunk{chunk}", NO_COMPRESSION, model, params, mesh,
+            args, cache_spec=cspec, prefill_chunk=chunk)
+        # the chunk program must compile exactly once across the whole mix
+        # of prompt lengths (vs one whole-prompt program per length bucket)
+        assert eng_c.prefill_cache_size() == 1, eng_c.prefill_cache_size()
+        assert eng_c.decode_cache_size() == 1, eng_c.decode_cache_size()
+        match = float(np.mean([np.mean(c[:len(w)] == w[:len(c)])
+                               for c, w in zip(out_c, out_w)]))
+        speedup = (rec_w["tpot_ms"]["p95"] / rec_c["tpot_ms"]["p95"]
+                   if rec_c["tpot_ms"]["p95"] > 0 else float("nan"))
+        print(f"  [{cname}] tpot p95 {rec_w['tpot_ms']['p95']:.2f} -> "
+              f"{rec_c['tpot_ms']['p95']:.2f} ms "
+              f"({speedup:.2f}x), ttft p90 {rec_w['ttft_ms']['p90']:.1f} -> "
+              f"{rec_c['ttft_ms']['p90']:.1f} ms, token match {match:.3f}, "
+              f"chunked p95 lower: {rec_c['tpot_ms']['p95'] < rec_w['tpot_ms']['p95']}")
+        out.append({
+            "cache_mode": cname,
+            "prompt_len": plen,
+            "chunk": chunk,
+            "whole": rec_w, "chunked": rec_c,
+            "tpot_p95_speedup": round(speedup, 3),
+            "tpot_p95_chunked_lower": bool(
+                rec_c["tpot_ms"]["p95"] < rec_w["tpot_ms"]["p95"]),
+            "token_match_vs_whole": round(match, 4),
+        })
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
@@ -172,6 +249,14 @@ def main():
                     help="also compare paged KV cache modes at an equal byte "
                          "budget: bf16 dense vs this MX scheme "
                          "('fp4_e2m1', 'fp5_e2m2_b16_e8m0', ...)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="also compare whole-prompt vs chunked prefill at "
+                         "this chunk size (tokens per engine step; 0 picks "
+                         "hol-prompt-len/4 automatically)")
+    ap.add_argument("--hol-prompt-len", type=int, default=512,
+                    help="prompt length for the head-of-line-blocking "
+                         "comparison (long enough that a whole-prompt "
+                         "prefill dominates a decode step)")
     ap.add_argument("--single-device", action="store_true",
                     help="skip the host mesh (no real collectives)")
     args = ap.parse_args()
@@ -187,12 +272,17 @@ def main():
           f"slots={args.slots} requests={args.requests} rate={args.rate}/s")
 
     records = [
-        run_policy("uncompressed", NO_COMPRESSION, model, params, mesh, args)[0],
+        run_policy("uncompressed", NO_COMPRESSION, model, params, mesh, args,
+                   prefill_chunk=args.prefill_chunk)[0],
         run_policy("mx4-gather",
                    CompressionPolicy(spec=MXSpec.make("fp4_e2m1", 32, "e8m0")),
-                   model, params, mesh, args)[0],
+                   model, params, mesh, args,
+                   prefill_chunk=args.prefill_chunk)[0],
     ]
     result = {"config": vars(args), "tp": tp, "records": records}
+    if args.prefill_chunk is not None:
+        result["prefill_modes"] = compare_prefill_modes(model, params, mesh,
+                                                        args)
     if args.cache_spec and KVCacheSpec.parse(args.cache_spec).quantized:
         result["cache_modes"] = compare_caches(model, params, mesh, args)
     OUT_DIR.mkdir(parents=True, exist_ok=True)

@@ -30,6 +30,9 @@ def main():
     ap.add_argument("--mesh", action="store_true",
                     help="use a (data, model) mesh over host devices")
     ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt tokens per engine step (chunked prefill; "
+                         "0 = whole-prompt, default auto)")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(
@@ -60,8 +63,10 @@ def main():
          "fp4_e2m1"),
     ]:
         ctx = make_context(mesh, None, policy=policy)
+        # chunked prefill by default: prompts stream into the paged pools
+        # interleaved with decode (DESIGN.md §Chunked prefill)
         engine = Engine(model, state["params"], ctx, max_slots=4, max_len=192,
-                        cache_spec=cache_spec)
+                        cache_spec=cache_spec, prefill_chunk=args.prefill_chunk)
         engine.run([Request(prompt=prompt, max_new_tokens=2)])  # compile warmup
         # staggered arrivals: requests trickle in while earlier ones decode
         reqs = [Request(prompt=prompt, max_new_tokens=48, arrival_s=0.02 * i)
@@ -72,6 +77,7 @@ def main():
         s = engine.stats.summary()
         print(f"\n--- {name}: prefill TTFT {stats['median_s']*1e3:.1f} ms, "
               f"served TTFT p50 {s['ttft_p50_s']*1e3:.1f} ms, "
+              f"TPOT p95 {s['tpot_p95_s']*1e3:.2f} ms, "
               f"{s['tokens_per_s']:.1f} tok/s, "
               f"kv pools {engine.kv_pool_bytes()/1e6:.2f} MB")
         print(f"completion: {text!r}")

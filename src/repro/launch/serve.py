@@ -10,6 +10,11 @@ default) or an MX scheme (``fp4_e2m1``, or a full name like
 ``fp5_e2m2_b16_e8m0``) that stores K/V blocks in wire format — ~4x more
 resident KV blocks in the same HBM at a small quantization cost
 (DESIGN.md §Quantized cache).
+
+``--prefill-chunk`` sets the per-step prompt-token budget for chunked
+prefill (DESIGN.md §Chunked prefill): prompts stream into the paged pools
+chunk by chunk, interleaved with batched decode, instead of stalling every
+running decode for a whole-prompt prefill. 0 forces whole-prompt prefill.
 """
 import argparse
 import time
@@ -44,6 +49,12 @@ def main():
     ap.add_argument("--cache-spec", default="bf16",
                     help="KV pool storage: 'bf16' (dense) or an MX scheme "
                          "('fp4_e2m1', 'fp5_e2m2_b16_e8m0', ...)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt tokens prefillable per engine step (chunked "
+                         "prefill, interleaved with decode). Default: "
+                         "2*block_size for pure-attention archs, 0 "
+                         "(whole-prompt) otherwise; pass 0 to force "
+                         "whole-prompt prefill")
     ap.add_argument("--stagger", type=float, default=0.0,
                     help="inter-arrival gap in seconds (simulated traffic)")
     args = ap.parse_args()
@@ -64,9 +75,12 @@ def main():
     max_len = args.prompt_len + args.new_tokens + cfg.n_patches * (
         cfg.frontend == "vision")
     engine = Engine(model, params, ctx, max_slots=args.slots, max_len=max_len,
-                    block_size=args.block_size, cache_spec=args.cache_spec)
+                    block_size=args.block_size, cache_spec=args.cache_spec,
+                    prefill_chunk=args.prefill_chunk)
     print(f"kv cache: {engine.cache_spec.describe()} "
-          f"({engine.kv_pool_bytes() / 1e6:.2f} MB pools)")
+          f"({engine.kv_pool_bytes() / 1e6:.2f} MB pools); prefill: "
+          + (f"chunked, {engine.prefill_chunk} tokens/step"
+             if engine.prefill_chunk else "whole-prompt"))
 
     n_req = args.requests or args.slots
     rng = np.random.default_rng(0)
@@ -95,6 +109,7 @@ def main():
     print(f"{s['n_requests']} requests, {s['n_generated']} tokens in "
           f"{wall:.2f}s wall (incl compile); steady tokens/s={s['tokens_per_s']:.1f}")
     print(f"TTFT p50 {s['ttft_p50_s']*1e3:.1f} ms, p90 {s['ttft_p90_s']*1e3:.1f} ms; "
+          f"TPOT p50 {s['tpot_p50_s']*1e3:.2f} ms, p95 {s['tpot_p95_s']*1e3:.2f} ms; "
           f"latency p50 {s['latency_p50_s']*1e3:.1f} ms; "
           f"preemptions={s['n_preemptions']}")
     stats = engine.measure_ttft(args.prompt_len, iters=4,

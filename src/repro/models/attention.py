@@ -30,7 +30,8 @@ from repro.core.tp import TPContext, column_linear, constrain, row_linear
 from repro.models.common import Initializer, apply_rope, init_linear, make_rope, rms_norm
 
 __all__ = ["init_attention", "KVCache", "init_cache", "attention",
-           "attention_specs", "paged_attention_decode", "quantize_kv_pages"]
+           "attention_specs", "paged_attention_decode", "paged_attention_chunk",
+           "quantize_kv_pages"]
 
 NEG_INF = -1e30
 _Q_CHUNK = 1024
@@ -311,6 +312,98 @@ def paged_attention_decode(
                         kv_heads=cfg.n_kv_heads)
     out = constrain(ctx, out, ctx.batch, None, a)
     y = row_linear(ctx, out, params["wo"]["w"], n_tokens=B)
+    return y, pool_k, pool_v
+
+
+# sentinel logical position for pool entries that must never be attended to
+# (unwritten / stale history at t >= start): larger than any real position,
+# so the causal mask t <= q_pos kills them unconditionally
+_T_INVALID = jnp.int32(2**30)
+
+
+def paged_attention_chunk(
+    ctx: TPContext,
+    params,
+    x: jnp.ndarray,                    # (1, C, d_model) — one prompt chunk
+    cfg: ModelConfig,
+    *,
+    start: jnp.ndarray,                # int32 scalar: position of x[:, 0]
+    table_row: jnp.ndarray,            # (max_blocks,) int32: the slot's blocks
+    pool_k,                            # (n_blocks, block_size, kv_dim) dense,
+    pool_v,                            #   or MXCompressed wire pools
+    window: Optional[int] = None,
+    cache_spec: Optional[KVCacheSpec] = None,
+):
+    """Chunked-prefill attention for ONE slot against the paged cache.
+
+    The slot's already-written history (positions < ``start``) is gathered
+    through its block-table row and attended together with the current
+    chunk's K/V — the chunk stays in compute precision while history reads
+    at pool precision (dense cast or MX dequantize), mirroring what decode
+    sees later. The chunk's K/V is then appended into the pools at positions
+    ``start + [0, C)``; positions whose covering block is unallocated (pads
+    past the slot's need) fall through to the null block. Unlike whole-prompt
+    prefill this never materializes a dense full-prompt cache, and its shapes
+    are independent of prompt length — the engine compiles it exactly once.
+
+    Returns (out (1, C, d_model), pool_k, pool_v).
+    """
+    B, C = x.shape[:2]
+    a = ctx.axis if ctx.tp else None
+    scale = cfg.head_dim**-0.5
+    p = start + jnp.arange(C, dtype=jnp.int32)                  # chunk positions
+    q, k_new, v_new = _qkv(ctx, params, x, cfg, p[None, :])
+    quantized = cache_spec is not None and cache_spec.quantized
+
+    nb = table_row.shape[0]
+    bs = (pool_k.payload if quantized else pool_k).shape[1]
+    cap = nb * bs
+    # scatter coordinates: block covering each chunk position (0 = null block
+    # for positions past the table, so over-capacity pads write harmlessly)
+    blk = jnp.where(p < cap, table_row[jnp.clip(p // bs, 0, nb - 1)], 0)
+    offs = p % bs
+
+    # gather history BEFORE the append so the chunk's own K/V is counted once
+    # (in compute precision below, not through the pool roundtrip)
+    t_hist = jnp.arange(cap, dtype=jnp.int32)
+    t_hist = jnp.where(t_hist < start, t_hist, _T_INVALID)
+    if quantized:
+        mxs = cache_spec.mx
+        k_hist = mx.dequantize(MXCompressed(
+            pool_k.payload[table_row].reshape(1, cap, -1),
+            pool_k.scales[table_row].reshape(1, cap, -1)), mxs, out_dtype=q.dtype)
+        v_hist = mx.dequantize(MXCompressed(
+            pool_v.payload[table_row].reshape(1, cap, -1),
+            pool_v.scales[table_row].reshape(1, cap, -1)), mxs, out_dtype=q.dtype)
+    else:
+        k_hist = pool_k[table_row].reshape(1, cap, -1).astype(q.dtype)
+        v_hist = pool_v[table_row].reshape(1, cap, -1).astype(q.dtype)
+
+    k_all = jnp.concatenate([k_hist, k_new.astype(q.dtype)], axis=1)
+    v_all = jnp.concatenate([v_hist, v_new.astype(q.dtype)], axis=1)
+    t_pos = jnp.concatenate([t_hist, p])
+    out = _attend(q, k_all, v_all, p, t_pos, causal=True, window=window,
+                  scale=scale, kv_heads=cfg.n_kv_heads)
+
+    # append the chunk into the pools (wire-quantized via the shared codec
+    # entry when the cache spec says so) — same constrain discipline as the
+    # decode write so the compiled programs agree on pool sharding
+    if quantized:
+        kq, vq = quantize_kv_pages(k_new[0], v_new[0], cache_spec.mx)
+        pool_k = constrain_wire_pool(ctx, MXCompressed(
+            payload=pool_k.payload.at[blk, offs].set(kq.payload),
+            scales=pool_k.scales.at[blk, offs].set(kq.scales)))
+        pool_v = constrain_wire_pool(ctx, MXCompressed(
+            payload=pool_v.payload.at[blk, offs].set(vq.payload),
+            scales=pool_v.scales.at[blk, offs].set(vq.scales)))
+    else:
+        pool_k = pool_k.at[blk, offs].set(k_new[0].astype(pool_k.dtype))
+        pool_v = pool_v.at[blk, offs].set(v_new[0].astype(pool_v.dtype))
+        pool_k = constrain(ctx, pool_k, None, None, a)
+        pool_v = constrain(ctx, pool_v, None, None, a)
+
+    out = constrain(ctx, out, ctx.batch, None, a)
+    y = row_linear(ctx, out, params["wo"]["w"], n_tokens=B * C)
     return y, pool_k, pool_v
 
 

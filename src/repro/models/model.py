@@ -15,7 +15,8 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import InputShape, ModelConfig
 from repro.core.tp import TPContext, constrain, row_linear
 from repro.models.attention import (
-    KVCache, attention, attention_specs, init_attention, paged_attention_decode,
+    KVCache, attention, attention_specs, init_attention,
+    paged_attention_chunk, paged_attention_decode,
 )
 from repro.models.common import (
     Initializer, embed, init_norm, rms_norm, unembed,
@@ -277,6 +278,68 @@ class Model:
         logits = unembed(ctx, x, head)[:, 0]
         new_cache = {**cache, "layers": new_layer_caches, "pos": pos + 1}
         return logits, new_cache
+
+    def prefill_chunk(self, ctx: TPContext, params, tokens, state, table_row,
+                      start, n_valid,
+                      cache_spec=None) -> Tuple[jnp.ndarray, Any]:
+        """Chunked prefill: process ``chunk_size`` tokens of ONE in-flight
+        prompt against the paged cache (DESIGN.md §Chunked prefill).
+
+        tokens (1, C) int32 — a fixed-size chunk of the prompt, right-padded;
+        table_row (max_blocks,) int32 — the slot's block-table row;
+        start / n_valid — int32 scalars (traced): position of tokens[0, 0]
+        and the number of real (non-pad) tokens in this chunk.
+
+        Each attention layer gathers the slot's already-written paged history
+        and attends over it plus the current chunk, then appends the chunk's
+        K/V directly into the pools (wire-quantized when ``cache_spec`` is
+        quantized) — no dense full-prompt cache is ever materialized, and
+        every shape is independent of prompt length, so the engine compiles
+        this exactly once for a whole serving run. Requires a pure-attention
+        decoder (recurrent layers would fold chunk pads into their state;
+        the engine routes those archs through whole-prompt prefill).
+
+        Returns (logits (1, V) at chunk index ``n_valid - 1``, new state).
+        """
+        from repro.models.moe import moe
+        from repro.models.transformer import _has_mlp_sublayer
+
+        cfg = self.cfg
+        if cfg.encoder_decoder:
+            raise ValueError(
+                "prefill_chunk does not thread encoder cross-attention; "
+                "encoder-decoder models use whole-prompt prefill")
+        x = embed(ctx, params["embed"]["w"], tokens)
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+        pools_k = list(state["pools_k"])
+        pools_v = list(state["pools_v"])
+        ai = 0
+        for i, spec in enumerate(cfg.layers):
+            if spec.kind != "attn":
+                raise ValueError(
+                    f"prefill_chunk requires a pure-attention stack; layer "
+                    f"{i} is {spec.kind!r} (use whole-prompt prefill)")
+            lp = params["layers"][i]
+            h = rms_norm(x, lp["ln1"]["w"])
+            out, pools_k[ai], pools_v[ai] = paged_attention_chunk(
+                ctx, lp["core"], h, cfg, start=start, table_row=table_row,
+                pool_k=pools_k[ai], pool_v=pools_v[ai], window=spec.window,
+                cache_spec=cache_spec)
+            ai += 1
+            x = constrain(ctx, x + out, ctx.batch, None, None)
+            if _has_mlp_sublayer(cfg, spec):
+                h = rms_norm(x, lp["ln2"]["w"])
+                if spec.moe:
+                    out, _ = moe(ctx, lp["moe"], h, cfg)
+                else:
+                    out = mlp(ctx, lp["mlp"], h, cfg)
+                x = constrain(ctx, x + out, ctx.batch, None, None)
+        x = rms_norm(x, params["final_norm"]["w"])
+        x = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+        head = params.get("lm_head", params["embed"])["w"]
+        logits = unembed(ctx, x, head)[:, 0]
+        new_state = {**state, "pools_k": pools_k, "pools_v": pools_v}
+        return logits, new_state
 
     def decode_step_paged(self, ctx: TPContext, params, tokens, state,
                           tables, lengths,

@@ -6,14 +6,25 @@ compressed TP collectives pay off; decode is policy-gated to uncompressed
 Architecture, invariants, and the compression gating between prefill and
 decode are documented in DESIGN.md.
 
+Prefill is CHUNKED by default (Sarathi-style token-budget scheduling): each
+engine step spends at most ``prefill_chunk`` prompt tokens on ONE in-flight
+prompt (the ``prefill_chunk`` program — compiled once, prompt-length
+independent) and then runs the batched decode for every live slot, so long
+prompts stream in chunk-by-chunk without stalling running decodes
+(head-of-line blocking) and without the per-length-bucket compile storm.
+Architectures the chunk program can't serve (recurrent layers, vision
+prefix, encoder-decoder) fall back to the whole-prompt prefill/insert pair.
+
 Shape-stability contract: the batched decode step always runs over all
-``max_slots`` slots and the prefill/insert pair is specialized per prompt
-LENGTH BUCKET, so requests joining and leaving mid-flight never trigger
-recompilation — ``decode_cache_size()`` stays at 1 for a whole run.
+``max_slots`` slots and the chunk program's shapes are independent of prompt
+length, so requests joining and leaving mid-flight never trigger
+recompilation — ``decode_cache_size()`` and ``prefill_cache_size()`` both
+stay at 1 for a whole run.
 """
 from __future__ import annotations
 
 import bisect
+import collections
 import dataclasses
 import time
 from typing import Any, Dict, List, Optional
@@ -24,7 +35,7 @@ import numpy as np
 
 from repro.core.mx import MXCompressed
 from repro.core.policy import NO_COMPRESSION
-from repro.core.tp import TPContext
+from repro.core.tp import TPContext, constrain
 from repro.models.attention import constrain_wire_pool, quantize_kv_pages
 from repro.models.model import Model
 from repro.serving.kv_cache import (
@@ -63,6 +74,12 @@ class _Work:
     admitted_t: Optional[float] = None
     first_token_t: Optional[float] = None
     preemptions: int = 0
+    # chunked-prefill state: a slot is PREFILLING while pos < len(prompt)
+    # (its prompt is streaming into the pools chunk by chunk) and DECODING
+    # after its first token is sampled
+    prefilling: bool = False
+    pos: int = 0                  # prompt tokens already written to the pools
+    token_times: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def done(self) -> bool:
@@ -76,11 +93,14 @@ class Engine:
     """Continuous-batching engine: paged KV blocks, FIFO admission by arrival
     time, LIFO preemption (evict-and-recompute) under block pressure."""
 
+    PREFILL_FN_CACHE_MAX = 8  # LRU bound on whole-prompt prefill programs
+
     def __init__(self, model: Model, params, ctx: TPContext, *,
                  max_len: int, batch_size: Optional[int] = None,
                  max_slots: Optional[int] = None, block_size: int = 16,
                  n_blocks: Optional[int] = None, cache_dtype=jnp.bfloat16,
                  cache_spec=None, compress_decode: bool = False,
+                 prefill_chunk: Optional[int] = None,
                  donate_cache: bool = True):
         self.model = model
         self.cfg = model.cfg
@@ -107,6 +127,22 @@ class Engine:
         self._pad_ok = all(s.kind == "attn" for s in self.cfg.layers)
         self._n_prefix = self.cfg.n_patches if self.cfg.frontend == "vision" else 0
 
+        # chunked prefill (DESIGN.md §Chunked prefill) needs a pure-attention
+        # decoder with no prefix tokens or encoder state threading through
+        # the chunk program; everything else takes the whole-prompt path
+        chunk_ok = (self._pad_ok and self._n_prefix == 0
+                    and not self.cfg.encoder_decoder)
+        if prefill_chunk is None:
+            prefill_chunk = 2 * block_size if chunk_ok else 0
+        elif prefill_chunk < 0:
+            raise ValueError("prefill_chunk must be >= 0 (0 = whole-prompt)")
+        elif prefill_chunk and not chunk_ok:
+            raise ValueError(
+                "prefill_chunk requires a pure-attention text decoder "
+                "(recurrent/vision/encoder-decoder archs use whole-prompt "
+                "prefill; pass prefill_chunk=0 or leave it unset)")
+        self.prefill_chunk = int(prefill_chunk)
+
         # paper §5.2 gating: compression pays on prefill's large payloads;
         # decode moves one token per slot, so it defaults to plain psum
         self.ctx_decode = ctx if compress_decode else dataclasses.replace(
@@ -121,16 +157,45 @@ class Engine:
                 cache_spec=cache_spec),
             donate_argnums=donate)
         self._sample = jax.jit(self._sample_impl)
-        self._prefill_fns: Dict[int, tuple] = {}
+        # pin the freshly-initialized pools to the canonical sharding every
+        # producer (chunk append, prefill-insert, decode write) constrains
+        # to, so the FIRST consumer of a reset state sees the same input
+        # layout as every later call and never compiles a second variant
+        a = ctx.axis if ctx.tp else None
+        pin1 = lambda p: (constrain_wire_pool(ctx, p)
+                          if isinstance(p, MXCompressed)
+                          else constrain(ctx, p, None, None, a))
+        self._pin_state = jax.jit(lambda state: {
+            **state,
+            "pools_k": [pin1(p) for p in state["pools_k"]],
+            "pools_v": [pin1(p) for p in state["pools_v"]],
+        }, donate_argnums=(0,) if donate_cache else ())
+        # whole-prompt prefill programs, one per LENGTH BUCKET. With chunking
+        # on this cache sits idle (measure_ttft aside); without it, it is
+        # LRU-bounded so mixed prompt lengths can't grow compiled programs
+        # without limit (hybrid archs compile per exact length).
+        self._prefill_fns: "collections.OrderedDict[int, tuple]" = \
+            collections.OrderedDict()
+        self._evicted_prefill_compiles = 0  # compiles lost to LRU drops
+        # ONE chunk program for every prompt length (the tentpole win: the
+        # per-bucket compile storm collapses to a single compilation)
+        self._chunk_fn = None
+        if self.prefill_chunk:
+            self._chunk_fn = jax.jit(
+                lambda p, toks, state, row, start, n_valid:
+                    model.prefill_chunk(ctx, p, toks, state, row, start,
+                                        n_valid, cache_spec=cache_spec),
+                donate_argnums=(2,) if donate_cache else ())
         self._reset()
 
     # ------------------------------------------------------------- state mgmt
 
     def _reset(self) -> None:
         self.allocator = BlockAllocator(self.n_blocks)
-        self._state = init_paged_state(self.cfg, self.n_slots, self.n_blocks,
-                                       self.block_size, self.cache_dtype,
-                                       cache_spec=self.cache_spec)
+        self._state = self._pin_state(
+            init_paged_state(self.cfg, self.n_slots, self.n_blocks,
+                             self.block_size, self.cache_dtype,
+                             cache_spec=self.cache_spec))
         self._tables = np.zeros((self.n_slots, self.max_blocks), np.int32)
         self._lengths = np.zeros((self.n_slots,), np.int32)
         self._cur = np.zeros((self.n_slots,), np.int32)
@@ -141,6 +206,19 @@ class Engine:
         """Compiled-variant count of the batched decode step (jit-stability
         witness: stays 1 however requests arrive and leave)."""
         return self._decode._cache_size()
+
+    def prefill_cache_size(self) -> int:
+        """Compiled-variant count of the serving-path prefill program
+        (mirror of ``decode_cache_size``). With chunked prefill this counts
+        the single chunk program — it stays 1 across any mix of prompt
+        lengths; on the whole-prompt path it sums the per-bucket programs
+        (what the chunk program exists to collapse). ``measure_ttft``'s
+        bucketed probes are excluded: they always go through the
+        whole-prompt path and are not part of serving."""
+        if self._chunk_fn is not None:
+            return self._chunk_fn._cache_size()
+        return self._evicted_prefill_compiles + sum(
+            fns[0]._cache_size() for fns in self._prefill_fns.values())
 
     def kv_pool_bytes(self) -> int:
         """Device bytes held by this engine's attention KV pools (payload +
@@ -170,7 +248,9 @@ class Engine:
 
     def _prefill_for(self, prompt_len: int):
         bucket, total, nb = self._shapes_for(prompt_len)
-        if bucket not in self._prefill_fns:
+        if bucket in self._prefill_fns:
+            self._prefill_fns.move_to_end(bucket)  # LRU touch
+        else:
             model, ctx, dtype = self.model, self.ctx, self.cache_dtype
 
             def prefill(params, batch, last_index):
@@ -180,6 +260,13 @@ class Engine:
 
             self._prefill_fns[bucket] = (
                 jax.jit(prefill), self._make_insert(nb, total), total, nb)
+            # bound the per-bucket program cache: hybrid archs specialize per
+            # exact prompt length, which is unbounded without an LRU drop
+            # (evicted compiles are remembered so prefill_cache_size stays a
+            # true compile count, not a survivor count)
+            while len(self._prefill_fns) > self.PREFILL_FN_CACHE_MAX:
+                _, old = self._prefill_fns.popitem(last=False)
+                self._evicted_prefill_compiles += old[0]._cache_size()
         return (bucket,) + self._prefill_fns[bucket]
 
     def _make_insert(self, nb: int, total: int):
@@ -255,6 +342,13 @@ class Engine:
             if slot is None:
                 return
             w = self._waiting[0]
+            if self.prefill_chunk:
+                # chunked admission is cheap: just a slot — blocks arrive
+                # incrementally as chunks land (_prefill_step), so a long
+                # prompt no longer needs its whole KV footprint up front
+                self._waiting.pop(0)
+                self._admit_chunked(w, slot, now)
+                continue
             _, _, _, _, nb = self._prefill_for(len(w.prompt))
             ids = self.allocator.alloc(nb)
             if ids is None:
@@ -266,6 +360,77 @@ class Engine:
                 return  # decode will retire/evict slots and free blocks
             self._waiting.pop(0)
             self._admit(w, slot, ids)
+
+    def _admit_chunked(self, w: _Work, slot: int, now: float) -> None:
+        """Move a request into a slot in PREFILLING state; its prompt will
+        stream into the pools ``prefill_chunk`` tokens per engine step."""
+        w.blocks = []
+        w.pos = 0
+        w.prefilling = True
+        self._clear_slot(slot)
+        if w.admitted_t is None:
+            w.admitted_t = now
+        self._running[slot] = w
+
+    def _prefill_step(self) -> bool:
+        """Run ONE prefill chunk for the earliest-arrival PREFILLING slot —
+        the per-step prompt-token budget (``prefill_chunk`` tokens) that
+        keeps long prefills from stalling running decodes. Blocks covering
+        the chunk are allocated incrementally here, evicting the
+        latest-arrival request under pressure. Returns True if a chunk ran.
+        """
+        pref = [s for s, w in self._running.items() if w.prefilling]
+        if not pref:
+            return False
+        slot = min(pref, key=lambda s: (self._running[s].arrival, s))
+        w = self._running[slot]
+        L = len(w.prompt)
+        n_valid = min(self.prefill_chunk, L - w.pos)
+        need = -(-(w.pos + n_valid) // self.block_size)
+        while True:
+            got = self.allocator.alloc_to(w.blocks, need)
+            if got is not None:
+                self._tables[slot, need - len(got):need] = got
+                break
+            victim = max(self._running,
+                         key=lambda s: (self._running[s].arrival, s))
+            if victim == slot:
+                if len(self._running) == 1:
+                    raise RuntimeError(
+                        f"prefill chunk needs {need - len(w.blocks)} KV "
+                        f"blocks; only {self.allocator.n_free} free and "
+                        f"nothing to evict — pool too small for this request")
+                # this slot is the LIFO victim itself: defer in place —
+                # keep the chunks already written (self-preempting would
+                # discard them and churn through admit/preempt every step)
+                # while earlier-arrival decodes retire and free blocks
+                return False
+            self._preempt(victim)
+
+        tokens = np.zeros((1, self.prefill_chunk), np.int32)
+        tokens[0, :n_valid] = w.prompt[w.pos:w.pos + n_valid]
+        logits, self._state = self._chunk_fn(
+            self.params, jnp.asarray(tokens), self._state,
+            jnp.asarray(self._tables[slot]), jnp.int32(w.pos),
+            jnp.int32(n_valid))
+        w.pos += n_valid
+        self._lengths[slot] = w.pos
+        if w.pos >= L:
+            # final chunk: its logits (read at the last real token) yield the
+            # request's first sampled token, ending PREFILLING
+            self._key, sub = jax.random.split(self._key)
+            temp = jnp.full((1,), w.req.temperature, jnp.float32)
+            tok = int(np.asarray(self._sample(logits, temp, sub))[0])
+            now = time.perf_counter() - self._t0
+            w.prefilling = False
+            self._cur[slot] = tok
+            if w.first_token_t is None:
+                w.first_token_t = now
+            w.tokens.append(tok)
+            w.token_times.append(now)
+            if w.done:
+                self._retire(slot, now)
+        return True
 
     def _admit(self, w: _Work, slot: int, ids: List[int]) -> None:
         _, prefill, insert, total, nb = self._prefill_for(len(w.prompt))
@@ -294,14 +459,19 @@ class Engine:
         if w.first_token_t is None:
             w.first_token_t = now  # TTFT endpoint: first sampled token
         w.tokens.append(tok)
+        w.token_times.append(now)
         self._running[slot] = w
         if w.done:
             self._retire(slot, now)
 
     def _grow_or_evict(self) -> None:
-        """Give every live slot a block covering its next write position,
-        preempting the latest-arrival request when the pool runs dry."""
-        for slot in sorted(self._running, key=lambda s: self._running[s].arrival):
+        """Give every DECODING slot a block covering its next write position,
+        preempting the latest-arrival request when the pool runs dry.
+        PREFILLING slots allocate their own blocks as chunks land
+        (_prefill_step); their masked decode writes fall into the null block
+        until then."""
+        decoding = [s for s in self._running if not self._running[s].prefilling]
+        for slot in sorted(decoding, key=lambda s: self._running[s].arrival):
             if slot not in self._running:  # preempted by an earlier iteration
                 continue
             w = self._running[slot]
@@ -323,10 +493,13 @@ class Engine:
 
     def _preempt(self, slot: int) -> None:
         """Evict-and-recompute: free the slot, fold generated tokens into the
-        prompt, and requeue; the readmission prefill rebuilds the KV."""
+        prompt, and requeue; the readmission prefill rebuilds the KV. A
+        PREFILLING victim simply restarts its prompt from chunk 0."""
         w = self._running.pop(slot)
         self.allocator.free(w.blocks)
         w.blocks = []
+        w.prefilling = False
+        w.pos = 0
         self._clear_slot(slot)
         w.prompt = np.concatenate(
             [np.asarray(w.req.prompt, np.int32),
@@ -350,25 +523,34 @@ class Engine:
             arrival_s=w.arrival, admitted_s=w.admitted_t,
             first_token_s=w.first_token_t, finished_s=now,
             n_prompt=len(np.asarray(r.prompt)), n_generated=len(w.tokens),
-            n_preemptions=w.preemptions)
+            n_preemptions=w.preemptions,
+            inter_token_s=[b - a for a, b in zip(w.token_times,
+                                                 w.token_times[1:])])
         r.ttft_s = r.timing.ttft_s
         r.latency_s = r.timing.latency_s
         self.stats.record(r.timing)
 
     def _decode_once(self) -> None:
+        """One batched decode step over every DECODING slot. PREFILLING slots
+        ride along shape-stably: their (garbage) write lands at
+        ``lengths[slot]`` — the next chunk's first position, which the chunk
+        program overwrites before any read, or the null block when that
+        block isn't allocated yet — and their sampled token is discarded."""
         logits, self._state = self._decode(
             self.params, jnp.asarray(self._cur[:, None]), self._state,
             jnp.asarray(self._tables), jnp.asarray(self._lengths))
+        active = [(s, w) for s, w in self._running.items() if not w.prefilling]
         temps = np.zeros((self.n_slots,), np.float32)
-        for slot, w in self._running.items():
+        for slot, w in active:
             self._lengths[slot] += 1
             temps[slot] = w.req.temperature
         self._key, sub = jax.random.split(self._key)
         toks = np.asarray(self._sample(logits, jnp.asarray(temps), sub))
         now = time.perf_counter() - self._t0
-        for slot, w in list(self._running.items()):
+        for slot, w in active:
             tok = int(toks[slot])
             w.tokens.append(tok)
+            w.token_times.append(now)
             self._cur[slot] = tok
             if w.done:
                 self._retire(slot, now)
@@ -411,8 +593,14 @@ class Engine:
                     time.sleep(min(max(self._waiting[0].arrival - now, 0.0),
                                    0.005))
                 continue
+            # one engine step = (at most) one prefill chunk, then a batched
+            # decode for every live DECODING slot — the mixed step that kills
+            # head-of-line blocking: decodes advance every step even while a
+            # long prompt is still streaming in
+            if self.prefill_chunk:
+                self._prefill_step()
             self._grow_or_evict()
-            if self._running:
+            if any(not w.prefilling for w in self._running.values()):
                 self._decode_once()
         return requests
 
@@ -437,6 +625,9 @@ class Engine:
             logits, _cache = prefill(self.params, batch, last_index)
             logits.block_until_ready()
             times.append(time.perf_counter() - t0)
-        times = np.array(times[1:])  # drop compile
+        if len(times) > 1:
+            times = times[1:]  # drop the compile iteration (keep the only
+                               # sample when iters == 1 rather than go NaN)
+        times = np.array(times)
         return {"median_s": float(np.median(times)),
                 "std_s": float(np.std(times)), "iters": len(times)}

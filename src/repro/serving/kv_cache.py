@@ -136,6 +136,19 @@ class BlockAllocator:
         self.high_water = max(self.high_water, self.n_allocated)
         return ids
 
+    def alloc_to(self, blocks: List[int], n_needed: int) -> Optional[List[int]]:
+        """Incremental append: extend ``blocks`` (in place) so it covers
+        ``n_needed`` blocks, returning the newly granted ids — the chunked
+        scheduler's allocation primitive (blocks arrive as prefill chunks
+        land, not all at admission). Returns an empty list when already
+        covered, or None (and no change) when the pool can't supply the
+        remainder."""
+        got = self.alloc(max(0, n_needed - len(blocks)))
+        if got is None:
+            return None
+        blocks.extend(got)
+        return got
+
     def free(self, ids: List[int]) -> None:
         """Return blocks to the free list.
 

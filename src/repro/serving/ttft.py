@@ -129,6 +129,8 @@ class RequestTiming:
     n_prompt: int
     n_generated: int
     n_preemptions: int = 0           # evict/recompute round trips
+    inter_token_s: Optional[List[float]] = None  # gaps between consecutive
+                                                 # sampled tokens (TPOT samples)
 
     @property
     def ttft_s(self) -> float:
@@ -166,6 +168,11 @@ class ServeStats:
             return {"n_requests": 0}
         ttfts = [t.ttft_s for t in ts]
         lats = [t.latency_s for t in ts]
+        # inter-token latency (TPOT) pooled across requests: the decode-side
+        # metric that head-of-line blocking inflates (a whole-prompt prefill
+        # stalls every running decode for its full duration; chunked prefill
+        # bounds the stall to one chunk)
+        gaps = [g for t in ts for g in (t.inter_token_s or [])]
         generated = sum(t.n_generated for t in ts)
         makespan = max(t.finished_s for t in ts) - min(t.arrival_s for t in ts)
         return {
@@ -175,6 +182,9 @@ class ServeStats:
             "ttft_mean_s": sum(ttfts) / len(ttfts),
             "latency_p50_s": _percentile(lats, 50),
             "latency_p90_s": _percentile(lats, 90),
+            "tpot_p50_s": _percentile(gaps, 50),
+            "tpot_p95_s": _percentile(gaps, 95),
+            "n_inter_token_samples": len(gaps),
             "n_generated": generated,
             "makespan_s": makespan,
             "tokens_per_s": generated / makespan if makespan > 0 else float("nan"),

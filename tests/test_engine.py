@@ -68,6 +68,20 @@ def test_measure_ttft():
     engine = Engine(model, params, CTX, batch_size=2, max_len=40)
     stats = engine.measure_ttft(16, iters=3)
     assert stats["median_s"] > 0
+    assert stats["iters"] == 2  # warmup iteration dropped
+
+
+def test_measure_ttft_single_iter_keeps_its_sample():
+    """Regression: iters=1 used to drop its only sample via times[1:] and
+    return NaN medians."""
+    cfg = fp32_reduced("internlm2-1.8b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    engine = Engine(model, params, CTX, batch_size=2, max_len=40)
+    stats = engine.measure_ttft(16, iters=1)
+    assert stats["iters"] == 1
+    assert np.isfinite(stats["median_s"]) and stats["median_s"] > 0
+    assert np.isfinite(stats["std_s"])
 
 
 def test_byte_tokenizer_roundtrip():
@@ -119,6 +133,10 @@ def test_staggered_arrivals_and_per_request_ttft(small_model):
     assert s["n_requests"] == 5
     assert s["n_generated"] == sum(3 + i for i in range(5))
     assert s["tokens_per_s"] > 0
+    # inter-token latency (TPOT): one gap per token after the first, pooled
+    assert s["n_inter_token_samples"] == sum(2 + i for i in range(5))
+    assert np.isfinite(s["tpot_p50_s"]) and s["tpot_p50_s"] > 0
+    assert s["tpot_p95_s"] >= s["tpot_p50_s"]
     assert eng.decode_cache_size() == 1
 
 
@@ -215,6 +233,22 @@ def test_continuous_engine_hybrid_arch():
     alone = solo.run([Request(prompt=np.arange(6, dtype=np.int32),
                               max_new_tokens=3)])[0]
     np.testing.assert_array_equal(out[0].output, alone.output)
+
+
+def test_whole_prompt_prefill_fn_cache_is_bounded(small_model):
+    """The per-bucket whole-prompt program cache is an LRU with a hard cap
+    (hybrid archs compile per exact length — unbounded without this)."""
+    cfg, model, params = small_model
+    eng = Engine(model, params, CTX, max_slots=2, max_len=64,
+                 cache_dtype=jnp.float32, prefill_chunk=0)
+    eng.PREFILL_FN_CACHE_MAX = 2
+    for n in (5, 20, 40):  # buckets 16, 32, 64
+        eng._prefill_for(n)
+    assert len(eng._prefill_fns) == 2
+    assert 16 not in eng._prefill_fns  # oldest bucket evicted
+    eng._prefill_for(20)               # LRU touch keeps 32 resident
+    eng._prefill_for(5)
+    assert set(eng._prefill_fns) == {16, 32}
 
 
 def test_cache_bytes_accounting():
