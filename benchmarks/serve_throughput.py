@@ -29,11 +29,19 @@ the full prompt) vs Sarathi-style chunked prefill interleaved with decode,
 reporting the inter-token-latency (TPOT) tail each produces under the same
 traffic in each cache mode.
 
+With ``--shared-prefix-len`` the run adds the prefix-cache comparison: the
+same Poisson traffic whose prompts share a system-prompt-style prefix, with
+automatic prefix caching off vs on, reporting cold vs warm TTFT, the
+prefill tokens skipped, and the hit rate — with token-match asserts (warm
+outputs identical to the uncached run) in each cache mode.
+
   PYTHONPATH=src python benchmarks/serve_throughput.py
   PYTHONPATH=src python benchmarks/serve_throughput.py --requests 12 \
       --slots 4 --prompt-len 96 --new-tokens 24 --rate 20
   PYTHONPATH=src python benchmarks/serve_throughput.py --cache-spec fp4_e2m1 \
       --prefill-chunk 16
+  PYTHONPATH=src python benchmarks/serve_throughput.py --cache-spec fp4_e2m1 \
+      --shared-prefix-len 64
 """
 import argparse
 import dataclasses
@@ -71,15 +79,17 @@ def build_requests(n, prompt_len, new_tokens, rate_hz, vocab, seed=0):
 
 def run_policy(name, policy, model, params, mesh, args, *,
                cache_spec=None, n_blocks=None, cache_dtype=jnp.float32,
-               prefill_chunk=None):
+               prefill_chunk=None, prefix_cache=False, requests_fn=None):
     ctx = make_context(mesh, None, policy=policy)
     engine = Engine(model, params, ctx, max_slots=args.slots,
                     max_len=args.prompt_len + args.new_tokens,
                     block_size=args.block_size, cache_dtype=cache_dtype,
                     cache_spec=cache_spec, n_blocks=n_blocks,
-                    prefill_chunk=prefill_chunk)
-    reqs = build_requests(args.requests, args.prompt_len, args.new_tokens,
-                          args.rate, model.cfg.vocab_size)
+                    prefill_chunk=prefill_chunk, prefix_cache=prefix_cache)
+    build = requests_fn or (lambda: build_requests(
+        args.requests, args.prompt_len, args.new_tokens, args.rate,
+        model.cfg.vocab_size))
+    reqs = build()
     # warmup run compiles prefill bucket + decode step outside the timed run
     warm = [Request(prompt=reqs[0].prompt.copy(), max_new_tokens=2)]
     engine.run(warm)
@@ -113,6 +123,9 @@ def run_policy(name, policy, model, params, mesh, args, *,
         },
         "preemptions": s["n_preemptions"],
         "prefill_chunk": engine.prefill_chunk,
+        "prefix_cache": engine.prefix_cache,
+        "prefill_tokens_skipped": s["prefill_tokens_skipped"],
+        "prefix_hit_rate": round(s["prefix_hit_rate"], 4),
         "decode_compilations": engine.decode_cache_size(),
         "prefill_compilations": engine.prefill_cache_size(),
     }
@@ -235,6 +248,112 @@ def compare_prefill_modes(model, params, mesh, args):
     return out
 
 
+def build_shared_prefix_requests(n, shared_len, prompt_len, new_tokens,
+                                 rate_hz, vocab, seed=0):
+    """Shared-system-prompt traffic: every prompt opens with the SAME
+    ``shared_len`` tokens (the few-shot/system-prompt serving shape) and
+    continues with a per-request random suffix; fixed-seed Poisson
+    arrivals."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, vocab, shared_len).astype(np.int32)
+    gaps = rng.exponential(1.0 / rate_hz, size=n) if rate_hz > 0 else np.zeros(n)
+    arrivals = np.cumsum(gaps)
+    return [
+        Request(prompt=np.concatenate(
+                    [shared, rng.integers(0, vocab, prompt_len - shared_len)
+                     .astype(np.int32)]),
+                max_new_tokens=new_tokens, arrival_s=float(arrivals[i]))
+        for i in range(n)
+    ]
+
+
+def compare_prefix_cache(model, params, mesh, args):
+    """Shared-system-prompt comparison: the same Poisson traffic (prompts
+    sharing a ``--shared-prefix-len`` prefix) with the prefix cache OFF vs
+    ON, in each requested cache mode (bf16, and the MX scheme when
+    ``--cache-spec`` is quantized).
+
+    Reported per mode: for the WARM requests (those served partly from
+    shared blocks in the on-run), their TTFT p50/p95 cold (off-run, where
+    the same requests prefill from scratch) vs warm (on-run) — a
+    per-request pairing, so queueing affects both sides equally — plus the
+    prefill tokens skipped and hit rate that attribute the win. Token-match
+    asserts pin correctness: warm outputs must be IDENTICAL to the
+    prefix-cache-off run — matches resume at chunk-aligned boundaries, so
+    the recomputed suffix is the same program on the same bytes in both
+    cache modes. Compile-once asserts cover the chunk and decode programs.
+    """
+    shared = args.shared_prefix_len
+    chunk = args.prefill_chunk or 2 * args.block_size
+    if shared % chunk:
+        print(f"note: shared-prefix-len {shared} is not a multiple of the "
+              f"chunk ({chunk}); matches truncate to chunk multiples")
+    plen = (args.prompt_len if args.prompt_len > shared
+            else shared + 2 * args.block_size)
+    args = argparse.Namespace(**{**vars(args), "prompt_len": plen})
+    mk = lambda: build_shared_prefix_requests(
+        args.requests, shared, plen, args.new_tokens, args.rate,
+        model.cfg.vocab_size)
+    cache_modes = [("bf16", None)]
+    if args.cache_spec and KVCacheSpec.parse(args.cache_spec).quantized:
+        spec = KVCacheSpec.parse(args.cache_spec)
+        cache_modes.append((spec.mx.name, spec))
+    print(f"\n-- prefix cache: cold vs warm TTFT "
+          f"(shared prefix {shared} of {plen} tokens, chunk {chunk}) --")
+    out = []
+    for cname, cspec in cache_modes:
+        rec_off, out_off, eng_off = run_policy(
+            f"{cname}/prefix-off", NO_COMPRESSION, model, params, mesh, args,
+            cache_spec=cspec, prefill_chunk=chunk, requests_fn=mk)
+        rec_on, out_on, eng_on = run_policy(
+            f"{cname}/prefix-on", NO_COMPRESSION, model, params, mesh, args,
+            cache_spec=cspec, prefill_chunk=chunk, prefix_cache=True,
+            requests_fn=mk)
+        assert eng_on.prefill_cache_size() == 1, eng_on.prefill_cache_size()
+        assert eng_on.decode_cache_size() == 1, eng_on.decode_cache_size()
+        # sharing must not change what anyone decodes: every request's
+        # tokens are identical with the cache on and off
+        for i, (a, b) in enumerate(zip(out_on, out_off)):
+            assert np.array_equal(a, b), (
+                f"[{cname}] request {i} diverged with prefix cache on")
+        # pair each warm request with ITSELF in the off run (same arrivals,
+        # same prompts): cold = its TTFT prefilling from scratch, warm = its
+        # TTFT served from shared blocks — queueing hits both sides equally
+        t_on = sorted(eng_on.stats.timings, key=lambda t: t.arrival_s)
+        t_off = sorted(eng_off.stats.timings, key=lambda t: t.arrival_s)
+        warm_pairs = [(b.ttft_s, a.ttft_s) for a, b in zip(t_on, t_off)
+                      if a.n_cached_prompt > 0]
+        cold_ttft, warm_ttft = (zip(*warm_pairs) if warm_pairs
+                                else ((), ()))
+        p = lambda xs, q: (float(np.percentile(list(xs), q)) if xs
+                           else float("nan"))
+        cold_p50, warm_p50 = p(cold_ttft, 50), p(warm_ttft, 50)
+        s_on = eng_on.stats.summary()
+        print(f"  [{cname}] warm-request ttft p50 {cold_p50*1e3:.1f} -> "
+              f"{warm_p50*1e3:.1f} ms (cold vs warm, "
+              f"{len(warm_pairs)}/{len(t_on)} requests warm); "
+              f"skipped {s_on['prefill_tokens_skipped']} prompt tokens "
+              f"(hit rate {s_on['prefix_hit_rate']:.2f}); token match: exact; "
+              f"warm p50 lower: {warm_p50 < cold_p50}")
+        out.append({
+            "cache_mode": cname,
+            "shared_prefix_len": shared,
+            "prompt_len": plen,
+            "chunk": chunk,
+            "off": rec_off, "on": rec_on,
+            "cold_ttft_ms": {"p50": round(p(cold_ttft, 50) * 1e3, 2),
+                             "p95": round(p(cold_ttft, 95) * 1e3, 2)},
+            "warm_ttft_ms": {"p50": round(p(warm_ttft, 50) * 1e3, 2),
+                             "p95": round(p(warm_ttft, 95) * 1e3, 2)},
+            "n_warm": len(warm_pairs), "n_requests": len(t_on),
+            "warm_p50_lower_than_cold": bool(warm_p50 < cold_p50),
+            "prefill_tokens_skipped": s_on["prefill_tokens_skipped"],
+            "prefix_hit_rate": round(s_on["prefix_hit_rate"], 4),
+            "token_match_vs_off": 1.0,
+        })
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
@@ -253,6 +372,12 @@ def main():
                     help="also compare whole-prompt vs chunked prefill at "
                          "this chunk size (tokens per engine step; 0 picks "
                          "hol-prompt-len/4 automatically)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="also compare cold vs warm TTFT under traffic whose "
+                         "prompts share a prefix of this many tokens, with "
+                         "the prefix cache off vs on, in each cache mode "
+                         "(pick a multiple of the chunk size for exact "
+                         "token-match asserts)")
     ap.add_argument("--hol-prompt-len", type=int, default=512,
                     help="prompt length for the head-of-line-blocking "
                          "comparison (long enough that a whole-prompt "
@@ -285,6 +410,9 @@ def main():
                                                         args)
     if args.cache_spec and KVCacheSpec.parse(args.cache_spec).quantized:
         result["cache_modes"] = compare_caches(model, params, mesh, args)
+    if args.shared_prefix_len:
+        result["prefix_cache"] = compare_prefix_cache(model, params, mesh,
+                                                      args)
     OUT_DIR.mkdir(parents=True, exist_ok=True)
     out = OUT_DIR / "serve_throughput.json"
     out.write_text(json.dumps(result, indent=1))

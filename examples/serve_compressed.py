@@ -1,8 +1,11 @@
 """Serve a small trained model through the continuous-batching engine,
 comparing TTFT and output quality with and without compressed TP
-communication under staggered request arrivals. The last row additionally
-stores the paged KV cache itself in MX wire format (``cache_spec=...`` —
-~4x the resident KV blocks per byte, see DESIGN.md §Quantized cache).
+communication under staggered request arrivals. The later rows additionally
+store the paged KV cache itself in MX wire format (``cache_spec=...`` —
+~4x the resident KV blocks per byte, see DESIGN.md §Quantized cache) and
+turn on automatic prefix caching (``prefix_cache=True`` — requests sharing
+the demo prompt reuse its KV blocks instead of re-prefilling; the row
+reports the prompt tokens skipped, see docs/serving.md).
 
   PYTHONPATH=src python examples/serve_compressed.py
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -33,6 +36,9 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="prompt tokens per engine step (chunked prefill; "
                          "0 = whole-prompt, default auto)")
+    ap.add_argument("--prefix-cache", type=int, default=1, choices=[0, 1],
+                    help="enable prefix caching on the rows marked +prefix "
+                         "(0 drops those rows back to cold prefills)")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(
@@ -54,21 +60,33 @@ def main():
     tok = ByteTokenizer()
     prompt = tok.encode("def main():\n    ")
 
-    for name, policy, cache_spec in [
-        ("bf16", NO_COMPRESSION, None),
-        ("mx4-gather", CompressionPolicy(spec=MXSpec.make("fp4_e2m1", 32)), None),
+    mx4 = lambda: CompressionPolicy(spec=MXSpec.make("fp4_e2m1", 32))
+    for name, policy, cache_spec, prefix in [
+        ("bf16", NO_COMPRESSION, None, False),
+        ("mx4-gather", mx4(), None, False),
         ("mx4-two-phase", CompressionPolicy(spec=MXSpec.make("fp4_e2m1", 32),
-                                            variant="two_phase"), None),
-        ("mx4-kv-cache", CompressionPolicy(spec=MXSpec.make("fp4_e2m1", 32)),
-         "fp4_e2m1"),
+                                            variant="two_phase"), None, False),
+        ("mx4-kv-cache", mx4(), "fp4_e2m1", False),
+        ("mx4+prefix", mx4(), None, True),
+        ("mx4-kv-cache+prefix", mx4(), "fp4_e2m1", True),
     ]:
+        prefix = prefix and bool(args.prefix_cache)
         ctx = make_context(mesh, None, policy=policy)
         # chunked prefill by default: prompts stream into the paged pools
         # interleaved with decode (DESIGN.md §Chunked prefill)
         engine = Engine(model, state["params"], ctx, max_slots=4, max_len=192,
-                        cache_spec=cache_spec, prefill_chunk=args.prefill_chunk)
-        engine.run([Request(prompt=prompt, max_new_tokens=2)])  # compile warmup
+                        cache_spec=cache_spec, prefill_chunk=args.prefill_chunk,
+                        prefix_cache=prefix)
+        # compile warmup; the staggered duplicate also compiles the prefix
+        # cache's COW block-fork program (it admits after the first request
+        # has published its blocks, so it full-matches)
+        warm = [Request(prompt=prompt, max_new_tokens=2)]
+        if prefix:
+            warm.append(Request(prompt=prompt, max_new_tokens=2, arrival_s=0.3))
+        engine.run(warm)
         # staggered arrivals: requests trickle in while earlier ones decode
+        # (identical demo prompts, so the +prefix rows serve the later ones
+        # from shared KV blocks)
         reqs = [Request(prompt=prompt, max_new_tokens=48, arrival_s=0.02 * i)
                 for i in range(4)]
         out = engine.run(reqs)
@@ -79,7 +97,9 @@ def main():
               f"served TTFT p50 {s['ttft_p50_s']*1e3:.1f} ms, "
               f"TPOT p95 {s['tpot_p95_s']*1e3:.2f} ms, "
               f"{s['tokens_per_s']:.1f} tok/s, "
-              f"kv pools {engine.kv_pool_bytes()/1e6:.2f} MB")
+              f"kv pools {engine.kv_pool_bytes()/1e6:.2f} MB"
+              + (f", prefix-skipped {s['prefill_tokens_skipped']} tok"
+                 if prefix else ""))
         print(f"completion: {text!r}")
 
 

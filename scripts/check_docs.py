@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Markdown link/anchor checker (stdlib only) — CI gate for the docs tree.
+
+Checks every tracked ``*.md`` file (repo root and ``docs/``):
+
+* relative links point at files/directories that exist;
+* ``#anchors`` (same-file or cross-file into another markdown file) resolve
+  against GitHub-style heading slugs (lowercase, punctuation stripped,
+  spaces -> hyphens, ``-N`` suffixes for duplicates);
+* links inside fenced code blocks are ignored; external schemes
+  (http/https/mailto) are skipped — no network in CI.
+
+Exit status: 0 when clean, 1 when any link is broken.
+
+  python scripts/check_docs.py            # check the repo
+  python scripts/check_docs.py README.md  # check specific files
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+from typing import Dict, List, Tuple
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# [text](target) — target up to the first unescaped ')' (good enough for the
+# docs we write; nested parens in URLs are not used here)
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+_FENCE = re.compile(r"^(```|~~~)")
+_EXTERNAL = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")  # http:, mailto:, ...
+
+
+def _slugify(heading: str) -> str:
+    """GitHub-flavored heading -> anchor slug."""
+    # drop inline code/links markup, keep the text
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)
+    text = text.replace("`", "").strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def _strip_fences(lines: List[str]) -> List[str]:
+    """Blank out fenced code blocks (links/headings inside are not rendered)."""
+    out, in_fence, fence = [], False, ""
+    for ln in lines:
+        m = _FENCE.match(ln.strip())
+        if m and not in_fence:
+            in_fence, fence = True, m.group(1)
+            out.append("")
+        elif m and in_fence and ln.strip().startswith(fence):
+            in_fence = False
+            out.append("")
+        else:
+            out.append("" if in_fence else ln)
+    return out
+
+
+def anchors_of(path: pathlib.Path, cache: Dict[pathlib.Path, set]) -> set:
+    if path not in cache:
+        slugs: Dict[str, int] = {}
+        found = set()
+        for ln in _strip_fences(path.read_text().splitlines()):
+            m = _HEADING.match(ln)
+            if not m:
+                continue
+            s = _slugify(m.group(2))
+            n = slugs.get(s, 0)
+            slugs[s] = n + 1
+            found.add(s if n == 0 else f"{s}-{n}")
+        cache[path] = found
+    return cache[path]
+
+
+def check_file(md: pathlib.Path,
+               cache: Dict[pathlib.Path, set]) -> List[Tuple[int, str, str]]:
+    """-> [(line, target, reason)] for every broken link in ``md``."""
+    bad = []
+    lines = _strip_fences(md.read_text().splitlines())
+    for i, ln in enumerate(lines, 1):
+        for m in _LINK.finditer(ln):
+            target = m.group(1)
+            if _EXTERNAL.match(target):
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = md if not path_part else (
+                md.parent / path_part).resolve()
+            if not dest.exists():
+                bad.append((i, target, "file not found"))
+                continue
+            if anchor:
+                if dest.is_dir() or dest.suffix.lower() != ".md":
+                    continue  # anchors into non-markdown: not checkable
+                if anchor.lower() not in anchors_of(dest, cache):
+                    bad.append((i, target, f"no heading for #{anchor}"))
+    return bad
+
+
+def main(argv: List[str]) -> int:
+    if argv:
+        files = [pathlib.Path(a).resolve() for a in argv]
+    else:
+        files = sorted(ROOT.glob("*.md")) + sorted(ROOT.glob("docs/**/*.md"))
+    cache: Dict[pathlib.Path, set] = {}
+    n_links = n_bad = 0
+    for md in files:
+        problems = check_file(md, cache)
+        n_links += sum(1 for ln in _strip_fences(md.read_text().splitlines())
+                       for _ in _LINK.finditer(ln))
+        for line, target, reason in problems:
+            rel = md.relative_to(ROOT) if md.is_relative_to(ROOT) else md
+            print(f"{rel}:{line}: broken link '{target}' ({reason})")
+        n_bad += len(problems)
+    print(f"checked {len(files)} markdown files, {n_links} links: "
+          f"{n_bad} broken")
+    # not the raw count: exit statuses wrap modulo 256, and 256 broken
+    # links must not read as success
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -210,7 +210,11 @@ class KVCacheSpec:
     ``mx=None`` is the dense default: pools hold the engine's ``cache_dtype``
     and the data path is bit-identical to the pre-quantization engine. With an
     ``MXSpec``, pools hold the wire format (bit-packed payload + scale bytes),
-    quantized on append and dequantized inside paged decode attention.
+    quantized on append and dequantized on read — in pure jnp, or inside the
+    fused Pallas dequant-attention kernel when ``use_pallas`` is set. Wire
+    bytes are deterministic post-quantization, which is what lets the prefix
+    cache share quantized blocks across requests by reference
+    (docs/serving.md).
     """
 
     mx: Optional[MXSpec] = None

@@ -15,6 +15,11 @@ resident KV blocks in the same HBM at a small quantization cost
 prefill (DESIGN.md §Chunked prefill): prompts stream into the paged pools
 chunk by chunk, interleaved with batched decode, instead of stalling every
 running decode for a whole-prompt prefill. 0 forces whole-prompt prefill.
+
+``--prefix-cache 1`` turns on automatic prefix caching (docs/serving.md):
+requests whose prompts share a prefix (system prompts, few-shot templates)
+map the shared KV blocks by reference instead of recomputing prefill —
+needs chunked prefill, i.e. a pure-attention arch.
 """
 import argparse
 import time
@@ -55,6 +60,11 @@ def main():
                          "2*block_size for pure-attention archs, 0 "
                          "(whole-prompt) otherwise; pass 0 to force "
                          "whole-prompt prefill")
+    ap.add_argument("--prefix-cache", type=int, default=0, choices=[0, 1],
+                    help="share KV blocks across requests with a common "
+                         "prompt prefix (refcounted blocks + hash-chain "
+                         "index; requires chunked prefill). 0 (default) is "
+                         "bit-identical to the engine without the cache")
     ap.add_argument("--stagger", type=float, default=0.0,
                     help="inter-arrival gap in seconds (simulated traffic)")
     args = ap.parse_args()
@@ -76,17 +86,26 @@ def main():
         cfg.frontend == "vision")
     engine = Engine(model, params, ctx, max_slots=args.slots, max_len=max_len,
                     block_size=args.block_size, cache_spec=args.cache_spec,
-                    prefill_chunk=args.prefill_chunk)
+                    prefill_chunk=args.prefill_chunk,
+                    prefix_cache=bool(args.prefix_cache))
     print(f"kv cache: {engine.cache_spec.describe()} "
           f"({engine.kv_pool_bytes() / 1e6:.2f} MB pools); prefill: "
           + (f"chunked, {engine.prefill_chunk} tokens/step"
-             if engine.prefill_chunk else "whole-prompt"))
+             if engine.prefill_chunk else "whole-prompt")
+          + f"; prefix cache: {'on' if engine.prefix_cache else 'off'}")
 
     n_req = args.requests or args.slots
     rng = np.random.default_rng(0)
+    # with the prefix cache on, give the workload something to share: every
+    # request opens with the same "system prompt" half (the common serving
+    # shape the cache exists for), followed by a per-request suffix
+    shared = rng.integers(0, cfg.vocab_size, args.prompt_len // 2).astype(
+        np.int32) if args.prefix_cache else np.zeros((0,), np.int32)
     reqs = [
         Request(
-            prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
+            prompt=np.concatenate([shared, rng.integers(
+                0, cfg.vocab_size, args.prompt_len - len(shared)
+            ).astype(np.int32)]),
             max_new_tokens=args.new_tokens,
             temperature=args.temperature,
             arrival_s=i * args.stagger,
@@ -108,6 +127,9 @@ def main():
     s = engine.stats.summary()
     print(f"{s['n_requests']} requests, {s['n_generated']} tokens in "
           f"{wall:.2f}s wall (incl compile); steady tokens/s={s['tokens_per_s']:.1f}")
+    if engine.prefix_cache:
+        print(f"prefix cache: {s['prefill_tokens_skipped']} prompt tokens "
+              f"skipped (hit rate {s['prefix_hit_rate']:.2f})")
     print(f"TTFT p50 {s['ttft_p50_s']*1e3:.1f} ms, p90 {s['ttft_p90_s']*1e3:.1f} ms; "
           f"TPOT p50 {s['tpot_p50_s']*1e3:.2f} ms, p95 {s['tpot_p95_s']*1e3:.2f} ms; "
           f"latency p50 {s['latency_p50_s']*1e3:.1f} ms; "

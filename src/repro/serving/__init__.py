@@ -1,6 +1,6 @@
 from repro.serving.engine import Engine, Request
 from repro.serving.kv_cache import (
-    BlockAllocator, cache_bytes, cache_specs, check_cache_spec,
+    BlockAllocator, PrefixIndex, cache_bytes, cache_specs, check_cache_spec,
     init_paged_state, paged_cache_bytes,
 )
 from repro.serving.ttft import (
@@ -9,7 +9,7 @@ from repro.serving.ttft import (
 
 __all__ = [
     "Engine", "Request", "cache_bytes", "cache_specs",
-    "BlockAllocator", "check_cache_spec", "init_paged_state",
+    "BlockAllocator", "PrefixIndex", "check_cache_spec", "init_paged_state",
     "paged_cache_bytes",
     "HARDWARE", "Hardware", "RequestTiming", "ServeStats",
     "ttft_breakdown", "ttft_seconds",

@@ -15,17 +15,27 @@ prompts stream in chunk-by-chunk without stalling running decodes
 Architectures the chunk program can't serve (recurrent layers, vision
 prefix, encoder-decoder) fall back to the whole-prompt prefill/insert pair.
 
+With ``prefix_cache=True`` the engine additionally shares KV blocks across
+requests with a common prompt prefix (docs/serving.md): full prompt blocks
+are published in a hash-chain index as their chunks land, admission maps
+matching blocks into the new slot's table by reference (refcounted), and
+chunked prefill resumes at the first non-cached token — warm requests skip
+the shared prefill work and still decode exactly what a cold engine
+decodes.
+
 Shape-stability contract: the batched decode step always runs over all
 ``max_slots`` slots and the chunk program's shapes are independent of prompt
 length, so requests joining and leaving mid-flight never trigger
 recompilation — ``decode_cache_size()`` and ``prefill_cache_size()`` both
-stay at 1 for a whole run.
+stay at 1 for a whole run (prefix-cache hits only edit the host-side block
+table, never program shapes).
 """
 from __future__ import annotations
 
 import bisect
 import collections
 import dataclasses
+import math
 import time
 from typing import Any, Dict, List, Optional
 
@@ -39,7 +49,8 @@ from repro.core.tp import TPContext, constrain
 from repro.models.attention import constrain_wire_pool, quantize_kv_pages
 from repro.models.model import Model
 from repro.serving.kv_cache import (
-    BlockAllocator, check_cache_spec, init_paged_state, paged_cache_bytes,
+    BlockAllocator, PrefixIndex, check_cache_spec, init_paged_state,
+    paged_cache_bytes,
 )
 from repro.serving.ttft import RequestTiming, ServeStats
 
@@ -80,6 +91,11 @@ class _Work:
     prefilling: bool = False
     pos: int = 0                  # prompt tokens already written to the pools
     token_times: List[float] = dataclasses.field(default_factory=list)
+    # prefix-cache state: rolling block hashes of the effective prompt
+    # (recomputed per admission — preemption folds generated tokens in) and
+    # the running count of prompt tokens served from shared blocks
+    hashes: Optional[List[int]] = None
+    cached_tokens: int = 0
 
     @property
     def done(self) -> bool:
@@ -90,8 +106,37 @@ class _Work:
 
 
 class Engine:
-    """Continuous-batching engine: paged KV blocks, FIFO admission by arrival
-    time, LIFO preemption (evict-and-recompute) under block pressure."""
+    """Continuous-batching serving engine over a paged KV cache.
+
+    Scheduling: FIFO admission by arrival time into ``max_slots`` decode
+    slots, chunked prefill interleaved with batched decode (one chunk + one
+    decode per engine step), LIFO preemption (evict-and-recompute) under
+    block pressure. See DESIGN.md for invariants and docs/serving.md for
+    the request-lifecycle walkthrough.
+
+    Key constructor knobs (all host-side; none change compiled shapes):
+
+    - ``max_slots`` / ``max_len`` — decode batch width and per-request
+      position capacity (``max_len`` rounds up to whole blocks).
+    - ``block_size`` / ``n_blocks`` — KV paging granularity and pool size;
+      ``n_blocks`` defaults to full provisioning (every slot can hold
+      ``max_len``), smaller values exercise eviction.
+    - ``cache_spec`` — pool storage: dense ``cache_dtype`` (default,
+      bit-identical to the pre-quantization engine) or an MX wire format
+      (``"fp4_e2m1"``; ~3.76x resident blocks per byte).
+    - ``prefill_chunk`` — prompt tokens per engine step; defaults to
+      ``2*block_size`` for pure-attention archs and ``0`` (whole-prompt
+      fallback) otherwise.
+    - ``prefix_cache`` — automatic prefix caching over refcounted blocks
+      (requires chunked prefill); ``False`` (default) is bit-identical to
+      the engine without the feature.
+    - ``compress_decode`` — lift the paper-§5.2 gating and run decode
+      collectives compressed too (default off: decode payloads are small).
+
+    ``run(requests)`` serves a list of ``Request``s and fills their
+    ``output``/``ttft_s``/``latency_s``/``timing``; per-run aggregates land
+    in ``self.stats`` (``ServeStats``).
+    """
 
     PREFILL_FN_CACHE_MAX = 8  # LRU bound on whole-prompt prefill programs
 
@@ -101,6 +146,7 @@ class Engine:
                  n_blocks: Optional[int] = None, cache_dtype=jnp.bfloat16,
                  cache_spec=None, compress_decode: bool = False,
                  prefill_chunk: Optional[int] = None,
+                 prefix_cache: bool = False,
                  donate_cache: bool = True):
         self.model = model
         self.cfg = model.cfg
@@ -142,6 +188,29 @@ class Engine:
                 "(recurrent/vision/encoder-decoder archs use whole-prompt "
                 "prefill; pass prefill_chunk=0 or leave it unset)")
         self.prefill_chunk = int(prefill_chunk)
+
+        # automatic prefix caching (DESIGN.md §Prefix caching): full prompt
+        # blocks are published in a hash-chain index and mapped by reference
+        # into later requests' block tables. Matching rides on the chunked
+        # scheduler (prefill resumes at the first non-cached token), so it
+        # requires a chunked engine; matches are truncated to prefill_chunk
+        # multiples, which keeps warm suffix computation chunk-aligned with
+        # the original writer's and therefore bit-identical.
+        self.prefix_cache = bool(prefix_cache)
+        if self.prefix_cache and not self.prefill_chunk:
+            raise ValueError(
+                "prefix_cache rides on chunked prefill (matches resume at "
+                "the first non-cached token); this engine is whole-prompt "
+                "(prefill_chunk=0 or a non-chunkable architecture)")
+        # pools store the exact values prefill computed only when they are
+        # dense at the model's compute dtype; quantized or down-cast pools
+        # are lossy, so a mid-chunk resume would attend pool-precision
+        # history where the cold run attended compute-precision values —
+        # _match_prefix gates the COW fast path on this (lossy pools resume
+        # at a chunk-aligned boundary instead, which is exact)
+        self._exact_pools = (not self.cache_spec.quantized and
+                             jnp.dtype(self.cache_dtype) ==
+                             jnp.dtype(self.cfg.dtype))
 
         # paper §5.2 gating: compression pays on prefill's large payloads;
         # decode moves one token per slot, so it defaults to plain psum
@@ -186,12 +255,23 @@ class Engine:
                     model.prefill_chunk(ctx, p, toks, state, row, start,
                                         n_valid, cache_spec=cache_spec),
                 donate_argnums=(2,) if donate_cache else ())
+        # copy-on-write block fork (prefix caching): duplicate one block's
+        # bytes in every attention layer's K/V pool so a slot that must
+        # rewrite inside a shared tail block writes into a private copy.
+        # src/dst are traced int32 scalars, so this compiles once.
+        self._cow_fn = None
+        if self.prefix_cache:
+            self._cow_fn = jax.jit(
+                self._cow_impl, donate_argnums=(0,) if donate_cache else ())
         self._reset()
 
     # ------------------------------------------------------------- state mgmt
 
     def _reset(self) -> None:
-        self.allocator = BlockAllocator(self.n_blocks)
+        self.prefix_index = (PrefixIndex(self.block_size)
+                             if self.prefix_cache else None)
+        self.allocator = BlockAllocator(self.n_blocks,
+                                        prefix_index=self.prefix_index)
         self._state = self._pin_state(
             init_paged_state(self.cfg, self.n_slots, self.n_blocks,
                              self.block_size, self.cache_dtype,
@@ -318,6 +398,22 @@ class Engine:
 
         return jax.jit(insert, donate_argnums=self._insert_donate)
 
+    def _cow_impl(self, state, src, dst):
+        """Copy block ``src``'s content to block ``dst`` in every attention
+        layer's K/V pool (wire payload+scales pairs when quantized). Same
+        constrain discipline as the other pool producers so downstream
+        programs keep their compile-once input shardings."""
+        a = self.ctx.axis if self.ctx.tp else None
+        copy1 = lambda p: (
+            constrain_wire_pool(self.ctx, MXCompressed(
+                payload=p.payload.at[dst].set(p.payload[src]),
+                scales=p.scales.at[dst].set(p.scales[src])))
+            if self.cache_spec.quantized
+            else constrain(self.ctx, p.at[dst].set(p[src]), None, None, a))
+        return {**state,
+                "pools_k": [copy1(p) for p in state["pools_k"]],
+                "pools_v": [copy1(p) for p in state["pools_v"]]}
+
     # ------------------------------------------------------------- sampling
 
     @staticmethod
@@ -363,14 +459,79 @@ class Engine:
 
     def _admit_chunked(self, w: _Work, slot: int, now: float) -> None:
         """Move a request into a slot in PREFILLING state; its prompt will
-        stream into the pools ``prefill_chunk`` tokens per engine step."""
+        stream into the pools ``prefill_chunk`` tokens per engine step. With
+        the prefix cache on, cached prompt blocks are mapped into the slot's
+        table first and chunking resumes at the first non-cached token."""
         w.blocks = []
         w.pos = 0
         w.prefilling = True
         self._clear_slot(slot)
+        if self.prefix_index is not None:
+            self._match_prefix(w, slot)
         if w.admitted_t is None:
             w.admitted_t = now
         self._running[slot] = w
+
+    def _match_prefix(self, w: _Work, slot: int) -> None:
+        """Map the longest indexed prefix of ``w.prompt`` into the slot.
+
+        Matches are truncated to ``prefill_chunk`` multiples so the warm
+        suffix recomputes with the same chunk boundaries as the original
+        writer (bit-identical outputs in both cache modes). A FULL-prompt
+        match must still recompute something — the engine needs last-token
+        logits to sample the first output token:
+
+        * exact pools (dense at the compute dtype): keep everything but the
+          final token; the tail shared block is COW-forked into a private
+          copy, since the chunk program rewrites position L-1 inside it.
+          If the pool can't supply the fork block, the tail share is
+          dropped instead (plain shorter match; never fails admission).
+        * lossy pools (quantized, or cache_dtype below the compute dtype):
+          resume at the last chunk-aligned boundary and recompute the whole
+          tail chunk. A mid-chunk resume would read the final chunk's
+          history at pool precision where the cold run attended it in
+          compute precision — visibly different logits on fp4 pools; the
+          aligned resume re-runs the writer's exact program instead."""
+        L = len(w.prompt)
+        bs = self.block_size
+        w.hashes = PrefixIndex.chain(w.prompt, self.block_size)
+        ids = self.prefix_index.match(w.hashes)
+        # resume-point granularity: a multiple of both the block size (match
+        # unit) and the chunk size (so warm chunk boundaries line up with
+        # the writer's) — a full-prompt match skips the truncation and goes
+        # through the COW path instead
+        grain = math.lcm(bs, self.prefill_chunk)
+        align = lambda blocks: blocks[:(len(blocks) * bs // grain) * grain // bs]
+        if ids and len(ids) * bs < L:
+            ids = align(ids)
+        if not ids:
+            return
+        self.allocator.share(ids)
+        w.blocks = list(ids)
+        m_tok = len(w.blocks) * bs
+        if m_tok >= L:  # full-prompt hit: recompute the last token's logits
+            fork = self.allocator.alloc(1) if self._exact_pools else None
+            if fork is not None:
+                self._state = self._cow_fn(self._state,
+                                           jnp.int32(w.blocks[-1]),
+                                           jnp.int32(fork[0]))
+                self.allocator.release([w.blocks[-1]])
+                w.blocks[-1] = fork[0]
+                m_tok = L - 1
+            else:  # lossy pools (or pool dry): resume at the last aligned
+                   # boundary and recompute the whole tail chunk — exact in
+                   # every cache mode, never fails admission
+                keep = ((L - 1) // grain) * grain // bs
+                self.allocator.release(w.blocks[keep:])
+                del w.blocks[keep:]
+                m_tok = keep * bs
+                if not w.blocks:
+                    return
+        w.pos = m_tok
+        w.cached_tokens += m_tok
+        self.prefix_index.hit_blocks += len(w.blocks)
+        self._tables[slot, :len(w.blocks)] = w.blocks
+        self._lengths[slot] = w.pos
 
     def _prefill_step(self) -> bool:
         """Run ONE prefill chunk for the earliest-arrival PREFILLING slot —
@@ -398,8 +559,9 @@ class Engine:
                 if len(self._running) == 1:
                     raise RuntimeError(
                         f"prefill chunk needs {need - len(w.blocks)} KV "
-                        f"blocks; only {self.allocator.n_free} free and "
-                        f"nothing to evict — pool too small for this request")
+                        f"blocks; only {self.allocator.n_available} "
+                        f"available and nothing to evict — pool too small "
+                        f"for this request")
                 # this slot is the LIFO victim itself: defer in place —
                 # keep the chunks already written (self-preempting would
                 # discard them and churn through admit/preempt every step)
@@ -413,8 +575,15 @@ class Engine:
             self.params, jnp.asarray(tokens), self._state,
             jnp.asarray(self._tables[slot]), jnp.int32(w.pos),
             jnp.int32(n_valid))
+        old_pos = w.pos
         w.pos += n_valid
         self._lengths[slot] = w.pos
+        if self.prefix_index is not None:
+            # publish the prompt blocks this chunk completed: hash j
+            # certifies tokens [0, (j+1)*bs), all now written and immutable
+            for j in range(old_pos // self.block_size,
+                           min(w.pos // self.block_size, len(w.hashes))):
+                self.prefix_index.register(w.hashes[j], w.blocks[j])
         if w.pos >= L:
             # final chunk: its logits (read at the last real token) yield the
             # request's first sampled token, ending PREFILLING
@@ -496,10 +665,11 @@ class Engine:
         prompt, and requeue; the readmission prefill rebuilds the KV. A
         PREFILLING victim simply restarts its prompt from chunk 0."""
         w = self._running.pop(slot)
-        self.allocator.free(w.blocks)
-        w.blocks = []
+        self.allocator.release(w.blocks)  # shared blocks survive in the
+        w.blocks = []                     # index for the readmission match
         w.prefilling = False
         w.pos = 0
+        w.hashes = None
         self._clear_slot(slot)
         w.prompt = np.concatenate(
             [np.asarray(w.req.prompt, np.int32),
@@ -514,7 +684,7 @@ class Engine:
 
     def _retire(self, slot: int, now: float) -> None:
         w = self._running.pop(slot)
-        self.allocator.free(w.blocks)
+        self.allocator.release(w.blocks)
         w.blocks = []
         self._clear_slot(slot)
         r = w.req
@@ -523,7 +693,7 @@ class Engine:
             arrival_s=w.arrival, admitted_s=w.admitted_t,
             first_token_s=w.first_token_t, finished_s=now,
             n_prompt=len(np.asarray(r.prompt)), n_generated=len(w.tokens),
-            n_preemptions=w.preemptions,
+            n_preemptions=w.preemptions, n_cached_prompt=w.cached_tokens,
             inter_token_s=[b - a for a, b in zip(w.token_times,
                                                  w.token_times[1:])])
         r.ttft_s = r.timing.ttft_s

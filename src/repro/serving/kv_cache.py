@@ -9,14 +9,21 @@ the concatenation of the blocks its row of the block table names, so
 admission/eviction never copies KV — only the host-side free list and the
 tiny block-table array change. Block 0 is reserved as a null/scratch block
 that inactive slots point at (their masked writes land there harmlessly).
+
+Block ownership is refcounted (``BlockAllocator``) so automatic prefix
+caching (``PrefixIndex``) can map one block into many block tables: full
+prompt blocks are published under rolling token-chain hashes, matched at
+admission, and retained in an LRU at refcount 0 for future hits —
+docs/serving.md walks through the lifecycle.
 """
 from __future__ import annotations
 
 import collections
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import LayerSpec, ModelConfig
@@ -29,8 +36,8 @@ from repro.models.xlstm import MLSTMCache, SLSTMCache
 
 __all__ = [
     "cache_bytes", "cache_specs", "layer_cache_len", "ring_positions",
-    "BlockAllocator", "NULL_BLOCK", "attn_layer_count", "init_paged_state",
-    "paged_cache_bytes", "check_cache_spec",
+    "BlockAllocator", "PrefixIndex", "NULL_BLOCK", "attn_layer_count",
+    "init_paged_state", "paged_cache_bytes", "check_cache_spec",
 ]
 
 NULL_BLOCK = 0  # reserved scratch block: never allocated, absorbs masked writes
@@ -104,35 +111,178 @@ def ring_positions(pos: jnp.ndarray, window: int) -> jnp.ndarray:
 # --------------------------------------------------------------- paged cache
 
 
-class BlockAllocator:
-    """Host-side free list over the KV block pool.
+class PrefixIndex:
+    """Hash-chain index over FULL prompt blocks -> resident block ids — the
+    lookup half of automatic prefix caching (DESIGN.md §Prefix caching,
+    docs/serving.md).
 
-    Pure scheduling state: allocation/free never touch device memory (the
-    pools are preallocated); a block id is just an index into the pool's
-    leading dim. Block 0 (``NULL_BLOCK``) is reserved and never handed out.
+    Key structure: block ``j`` of a prompt is keyed by the rolling hash of
+    tokens ``[0, (j+1)*block_size)`` (``chain``), so a hit on block ``j``
+    certifies the ENTIRE token prefix up to it — a new request whose chain
+    matches can map those block ids straight into its block table instead of
+    recomputing prefill. Block content is deterministic given the chain
+    (dense pools store exact compute values; quantized pools store
+    deterministic post-quantization wire bytes), so sharing by reference is
+    sound in both cache modes.
+
+    Lifecycle of a registered block (refcounts live in ``BlockAllocator``):
+
+    * ACTIVE — at least one slot holds a reference; never evictable.
+    * CACHED — refcount dropped to 0 on release; the block keeps its pool
+      bytes and sits in an LRU (``n_cached``). Reclaim is LAZY: the
+      allocator's free list stays the fast path, and only when it runs dry
+      does ``pop_lru`` recycle the coldest cached blocks.
     """
 
-    def __init__(self, n_blocks: int):
+    def __init__(self, block_size: int):
+        self.block_size = block_size
+        self._by_hash: Dict[int, int] = {}     # chain hash -> block id
+        self._by_block: Dict[int, int] = {}    # block id  -> chain hash
+        # refcount-0 registered blocks, insertion order = cold..hot
+        self._lru: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
+        self.hit_blocks = 0      # blocks actually mapped into slot tables
+                                 # (engine-maintained: counted AFTER the
+                                 # alignment/COW truncation of raw matches)
+        self.evicted_blocks = 0  # cached blocks recycled under pressure
+
+    def __len__(self) -> int:
+        return len(self._by_hash)
+
+    @property
+    def n_cached(self) -> int:
+        """Registered blocks at refcount 0 (lazily reclaimable)."""
+        return len(self._lru)
+
+    @staticmethod
+    def chain(tokens, block_size: int) -> List[int]:
+        """Rolling hashes of every FULL token block: entry ``j`` keys tokens
+        ``[0, (j+1)*block_size)``. A trailing partial block is never hashed —
+        only full blocks are shareable."""
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        h = hash(("kv-prefix-chain", block_size))
+        out = []
+        for j in range(len(toks) // block_size):
+            h = hash((h, toks[j * block_size:(j + 1) * block_size].tobytes()))
+            out.append(h)
+        return out
+
+    def match(self, hashes: Sequence[int]) -> List[int]:
+        """Longest indexed prefix of ``hashes`` -> block ids (pure lookup;
+        the caller must immediately ``share`` whatever it keeps to pin it
+        against eviction)."""
+        ids = []
+        for h in hashes:
+            b = self._by_hash.get(h)
+            if b is None:
+                break
+            ids.append(b)
+        return ids
+
+    def register(self, h: int, block: int) -> bool:
+        """Publish a fully-written prompt block. No-op (False) when the hash
+        is already served by another block — the duplicate stays private to
+        its writer and is freed normally on release."""
+        if h in self._by_hash or block in self._by_block:
+            return False
+        self._by_hash[h] = block
+        self._by_block[block] = h
+        return True
+
+    def contains_block(self, block: int) -> bool:
+        return block in self._by_block
+
+    def is_cached(self, block: int) -> bool:
+        return block in self._lru
+
+    def deactivate(self, block: int) -> None:
+        """Refcount hit 0: park the block in the LRU instead of freeing."""
+        self._lru[block] = None
+        self._lru.move_to_end(block)
+
+    def activate(self, block: int) -> None:
+        """A cached block was matched again: pull it out of the LRU."""
+        del self._lru[block]
+
+    def pop_lru(self, n: int) -> List[int]:
+        """Recycle up to ``n`` coldest refcount-0 blocks (drop their index
+        entries, return the ids to the caller's free list)."""
+        out = []
+        while self._lru and len(out) < n:
+            b, _ = self._lru.popitem(last=False)
+            del self._by_hash[self._by_block.pop(b)]
+            out.append(b)
+        self.evicted_blocks += len(out)
+        return out
+
+
+class BlockAllocator:
+    """Host-side refcounted free list over the KV block pool.
+
+    Pure scheduling state: allocation/release never touch device memory (the
+    pools are preallocated); a block id is just an index into the pool's
+    leading dim. Block 0 (``NULL_BLOCK``) is reserved and never handed out.
+
+    Ownership is counted: ``alloc`` hands out blocks at refcount 1,
+    ``share`` adds a holder (prefix-cache hits map one block into several
+    block tables), and ``release`` drops one — a block leaves circulation
+    only when its count reaches 0. With a ``PrefixIndex`` attached,
+    registered blocks at refcount 0 are parked in the index's LRU (bytes
+    retained for future prefix hits) instead of returning to the free list;
+    ``alloc`` reclaims them lazily only after the free list runs dry, so the
+    common path stays a deque pop. Every transition validates its ids — a
+    scheduler bug that over-releases (or releases the reserved null block /
+    a garbage id) would silently hand one block to two requests, corrupting
+    both of their KV sequences.
+    """
+
+    def __init__(self, n_blocks: int, prefix_index: Optional[PrefixIndex] = None):
         assert n_blocks >= 2, "need at least one allocatable block"
         self.n_blocks = n_blocks
+        self.index = prefix_index
         self._free = collections.deque(range(1, n_blocks))
-        self._free_set = set(self._free)  # O(1) double-free detection
-        self.high_water = 0  # max blocks simultaneously allocated (stats)
+        self._free_set = set(self._free)   # O(1) membership / double-release
+        self._ref: Dict[int, int] = {}     # block id -> live reference count
+        self.high_water = 0  # max blocks simultaneously referenced (stats)
 
     @property
     def n_free(self) -> int:
+        """Immediately allocatable blocks (free list only — cached blocks
+        are reclaimed lazily on top of these, see ``n_available``)."""
         return len(self._free)
 
     @property
+    def n_cached(self) -> int:
+        """Refcount-0 blocks retained by the prefix index (evictable)."""
+        return self.index.n_cached if self.index is not None else 0
+
+    @property
+    def n_available(self) -> int:
+        """Upper bound ``alloc`` can satisfy: free + lazily evictable."""
+        return len(self._free) + self.n_cached
+
+    @property
     def n_allocated(self) -> int:
-        return (self.n_blocks - 1) - len(self._free)
+        """Blocks with at least one live reference."""
+        return (self.n_blocks - 1) - len(self._free) - self.n_cached
+
+    def refcount(self, block: int) -> int:
+        return self._ref.get(int(block), 0)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop ``n`` block ids, or None (and no change) if they don't fit."""
-        if n > len(self._free):
+        """Pop ``n`` block ids at refcount 1, or None (and no change) if they
+        don't fit. The free list is the fast path; cached prefix blocks are
+        recycled (coldest-first) only to cover a shortfall."""
+        if n > self.n_available:
             return None
+        if n > len(self._free):  # lazy reclaim: only under actual pressure
+            for b in self.index.pop_lru(n - len(self._free)):
+                self._free.append(b)
+                self._free_set.add(b)
         ids = [self._free.popleft() for _ in range(n)]
         self._free_set.difference_update(ids)
+        for b in ids:
+            self._ref[b] = 1
         self.high_water = max(self.high_water, self.n_allocated)
         return ids
 
@@ -149,28 +299,56 @@ class BlockAllocator:
         blocks.extend(got)
         return got
 
-    def free(self, ids: List[int]) -> None:
-        """Return blocks to the free list.
+    def _check_id(self, b: int, verb: str) -> int:
+        b = int(b)
+        if b == NULL_BLOCK:
+            raise ValueError(f"{verb} of reserved NULL_BLOCK (block 0)")
+        if not 0 < b < self.n_blocks:
+            raise ValueError(
+                f"{verb} of out-of-range block id {b} (pool has "
+                f"{self.n_blocks} blocks)")
+        return b
 
-        A scheduler bug that frees a block twice (or frees the reserved null
-        block / a garbage id) would silently hand the same block to two
-        requests, corrupting both of their KV sequences — so every id is
-        validated before any state changes.
-        """
-        checked = []
-        for b in ids:
-            b = int(b)
-            if b == NULL_BLOCK:
-                raise ValueError("free of reserved NULL_BLOCK (block 0)")
-            if not 0 < b < self.n_blocks:
+    def share(self, ids: Sequence[int]) -> None:
+        """Add one reference per id (a prefix-cache hit mapping the blocks
+        into another slot's table). Valid targets are ACTIVE blocks
+        (refcount += 1) and CACHED refcount-0 blocks (revived out of the
+        index LRU at refcount 1); sharing a free or unknown block raises —
+        all ids are validated before any state changes."""
+        counts = collections.Counter(self._check_id(b, "share") for b in ids)
+        for b in counts:
+            if b not in self._ref and not (
+                    self.index is not None and self.index.is_cached(b)):
+                raise ValueError(f"share of unallocated block {b}")
+        for b, c in counts.items():
+            if b not in self._ref:     # CACHED -> ACTIVE
+                self.index.activate(b)
+                self._ref[b] = 0
+            self._ref[b] += c
+        self.high_water = max(self.high_water, self.n_allocated)
+
+    def release(self, ids: Sequence[int]) -> None:
+        """Drop one reference per id. At refcount 0 a block returns to the
+        free list — or, if it is registered in the prefix index, parks in
+        the index LRU with its bytes intact (lazily reclaimable). Releasing
+        more references than are held (double release), the reserved null
+        block, or a garbage id raises, and every id is validated before any
+        state changes."""
+        counts = collections.Counter(self._check_id(b, "release") for b in ids)
+        for b, c in counts.items():
+            if c > self._ref.get(b, 0):
                 raise ValueError(
-                    f"free of out-of-range block id {b} (pool has "
-                    f"{self.n_blocks} blocks)")
-            if b in self._free_set or b in checked:
-                raise ValueError(f"double free of block {b}")
-            checked.append(b)
-        self._free_set.update(checked)
-        self._free.extend(checked)
+                    f"release of block {b} exceeds its refcount "
+                    f"({c} > {self._ref.get(b, 0)}) — double release?")
+        for b, c in counts.items():
+            self._ref[b] -= c
+            if self._ref[b] == 0:
+                del self._ref[b]
+                if self.index is not None and self.index.contains_block(b):
+                    self.index.deactivate(b)   # keep bytes for future hits
+                else:
+                    self._free_set.add(b)
+                    self._free.append(b)
 
 
 def attn_layer_count(cfg: ModelConfig) -> int:

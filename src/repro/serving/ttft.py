@@ -120,15 +120,28 @@ def ttft_seconds(cfg, hw, tp, batch, seq, spec=None, scheme: str = "gather") -> 
 
 @dataclasses.dataclass
 class RequestTiming:
-    """Wall-clock milestones for one request, relative to the run's start."""
+    """Wall-clock milestones and token accounting for ONE request served by
+    the continuous-batching engine, relative to the run's start.
+
+    The engine fills one of these per request at retirement (also attached
+    as ``Request.timing``); ``ServeStats`` aggregates them. Derived
+    properties: ``ttft_s`` (arrival to first sampled token — queueing
+    included), ``latency_s`` (arrival to last token), ``queue_s`` (arrival
+    to first admission).
+    """
 
     arrival_s: float                 # request entered the system
     admitted_s: float                # first admission (prefill start)
     first_token_s: float             # first sampled token (TTFT endpoint)
     finished_s: float                # last token sampled
-    n_prompt: int
-    n_generated: int
+    n_prompt: int                    # tokens in the ORIGINAL prompt
+    n_generated: int                 # tokens sampled (== max_new_tokens
+                                     # unless eos_id stopped decode early)
     n_preemptions: int = 0           # evict/recompute round trips
+    n_cached_prompt: int = 0         # prompt tokens served from shared
+                                     # prefix-cache blocks instead of being
+                                     # prefilled (summed across readmissions,
+                                     # so preemption recompute counts again)
     inter_token_s: Optional[List[float]] = None  # gaps between consecutive
                                                  # sampled tokens (TPOT samples)
 
@@ -154,7 +167,16 @@ def _percentile(xs: List[float], p: float) -> float:
 
 
 class ServeStats:
-    """Aggregates RequestTimings across a serving run."""
+    """Aggregates ``RequestTiming`` records across one serving run.
+
+    ``Engine.run`` resets and fills one of these per call
+    (``engine.stats``); ``summary()`` reduces the records to the serving
+    distributions the benchmarks report — TTFT / latency percentiles,
+    pooled inter-token latency (TPOT), aggregate throughput over the
+    makespan, preemption counts, and the prefix-cache accounting
+    (``prefill_tokens_skipped`` / ``prefix_hit_rate``) that attributes the
+    warm-TTFT win to skipped prefill work.
+    """
 
     def __init__(self):
         self.timings: List[RequestTiming] = []
@@ -163,6 +185,22 @@ class ServeStats:
         self.timings.append(t)
 
     def summary(self) -> Dict[str, float]:
+        """Aggregate the run. Keys (seconds unless noted):
+
+        - ``n_requests`` / ``n_generated`` / ``makespan_s`` /
+          ``tokens_per_s`` — run totals (throughput over the makespan).
+        - ``ttft_{p50,p90,mean}_s`` and ``latency_{p50,p90}_s`` — arrival-
+          anchored per-request distributions (queueing included).
+        - ``tpot_{p50,p95}_s`` over ``n_inter_token_samples`` — gaps
+          between consecutive sampled tokens pooled across requests: the
+          decode-side metric head-of-line blocking inflates (chunked
+          prefill bounds the stall to one chunk).
+        - ``n_preemptions`` — evict-and-recompute round trips.
+        - ``prefill_tokens_skipped`` — prompt tokens served from shared
+          prefix-cache blocks instead of recomputed; ``prefix_hit_rate``
+          normalizes by original prompt tokens (can exceed 1.0 when
+          preempted requests re-skip on readmission).
+        """
         ts = self.timings
         if not ts:
             return {"n_requests": 0}
@@ -175,6 +213,8 @@ class ServeStats:
         gaps = [g for t in ts for g in (t.inter_token_s or [])]
         generated = sum(t.n_generated for t in ts)
         makespan = max(t.finished_s for t in ts) - min(t.arrival_s for t in ts)
+        prompt_tokens = sum(t.n_prompt for t in ts)
+        cached = sum(t.n_cached_prompt for t in ts)
         return {
             "n_requests": len(ts),
             "ttft_p50_s": _percentile(ttfts, 50),
@@ -189,4 +229,7 @@ class ServeStats:
             "makespan_s": makespan,
             "tokens_per_s": generated / makespan if makespan > 0 else float("nan"),
             "n_preemptions": sum(t.n_preemptions for t in ts),
+            "prefill_tokens_skipped": cached,
+            "prefix_hit_rate": (cached / prompt_tokens if prompt_tokens
+                                else 0.0),
         }

@@ -229,9 +229,12 @@ def test_chunked_compiles_once_multidevice():
         params = model.init_params(jax.random.PRNGKey(0))
         ctx = make_context(make_host_mesh(), None, policy=NO_COMPRESSION)
         for spec in (None, "fp4_e2m1"):
+            # prefix_cache on: the arange prompts are prefixes of each other,
+            # so later requests share the earlier ones' registered blocks —
+            # matching/COW must not add compiled variants under the mesh
             eng = Engine(model, params, ctx, max_slots=2, max_len=64,
                          cache_dtype=jnp.float32, cache_spec=spec,
-                         prefill_chunk=8)
+                         prefill_chunk=8, prefix_cache=True)
             eng.run([Request(prompt=np.arange(9 + 11 * i, dtype=np.int32),
                              max_new_tokens=4, arrival_s=0.002 * i)
                      for i in range(3)])

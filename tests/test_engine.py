@@ -185,18 +185,18 @@ def test_block_freelist_reuse_after_eviction(small_model):
 # ---------------------------------------------------- allocator invariants
 
 
-def test_allocator_rejects_double_free():
+def test_allocator_rejects_double_release():
     from repro.serving import BlockAllocator
 
     a = BlockAllocator(8)
     ids = a.alloc(3)
-    a.free(ids[:1])
-    with pytest.raises(ValueError, match="double free"):
-        a.free(ids[:1])
-    with pytest.raises(ValueError, match="double free"):
-        a.free([ids[1], ids[1]])  # duplicate within one call
-    # failed frees must not have corrupted state
-    a.free(ids[1:])
+    a.release(ids[:1])
+    with pytest.raises(ValueError, match="double release"):
+        a.release(ids[:1])
+    with pytest.raises(ValueError, match="double release"):
+        a.release([ids[1], ids[1]])  # duplicate within one call
+    # failed releases must not have corrupted state
+    a.release(ids[1:])
     assert a.n_free == 7 and a.n_allocated == 0
 
 
@@ -206,12 +206,12 @@ def test_allocator_rejects_null_and_out_of_range():
     a = BlockAllocator(8)
     ids = a.alloc(2)
     with pytest.raises(ValueError, match="NULL_BLOCK"):
-        a.free([0])
+        a.release([0])
     with pytest.raises(ValueError, match="out-of-range"):
-        a.free([8])
+        a.release([8])
     with pytest.raises(ValueError, match="out-of-range"):
-        a.free([-1])
-    a.free(ids)
+        a.release([-1])
+    a.release(ids)
     assert a.n_free == 7
 
 

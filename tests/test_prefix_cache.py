@@ -1,0 +1,285 @@
+"""Automatic prefix caching (DESIGN.md §Prefix caching, docs/serving.md):
+allocator refcount invariants, the hash-chain index lifecycle (ACTIVE ->
+CACHED -> reclaimed), copy-on-write forks of shared tail blocks, and the
+engine-level contract — warm requests decode exactly what a cold engine
+decodes while skipping the shared prefill work."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tp import TPContext
+from repro.models.model import Model
+from repro.serving import BlockAllocator, Engine, PrefixIndex, Request
+from tests.conftest import fp32_reduced
+
+CTX = TPContext(mesh=None)
+BS = 16
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = fp32_reduced("internlm2-1.8b")
+    model = Model(cfg)
+    return cfg, model, model.init_params(jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------ allocator refcounts
+
+
+def test_share_release_conservation():
+    """Every share adds exactly one reference and every release drops one;
+    a block leaves circulation only at refcount 0, and the free/active/
+    cached partition always covers the pool."""
+    a = BlockAllocator(10)
+    ids = a.alloc(3)
+    assert all(a.refcount(b) == 1 for b in ids)
+    a.share(ids)          # second holder (a prefix hit)
+    a.share(ids[:1])      # third holder of the first block
+    assert a.refcount(ids[0]) == 3 and a.refcount(ids[1]) == 2
+    a.release(ids)        # holder 1 exits: nothing freed yet
+    assert a.n_free == 6 and a.n_allocated == 3
+    a.release(ids)        # holder 2 exits: blocks 1,2 free, block 0 held
+    assert a.n_free == 8 and a.refcount(ids[0]) == 1
+    a.release(ids[:1])
+    assert a.n_free == 9 and a.n_allocated == 0
+    # conservation: every id back exactly once
+    assert sorted(a._free) == list(range(1, 10))
+
+
+def test_release_beyond_refcount_rejected():
+    a = BlockAllocator(8)
+    ids = a.alloc(2)
+    a.share(ids)
+    a.release(ids)
+    a.release(ids[:1])
+    with pytest.raises(ValueError, match="double release"):
+        a.release(ids[:1])       # refcount already 0
+    with pytest.raises(ValueError, match="double release"):
+        a.release([ids[1], ids[1]])  # two drops, one reference left
+    a.release(ids[1:])
+    assert a.n_free == 7
+
+
+def test_share_of_free_block_rejected():
+    a = BlockAllocator(8)
+    ids = a.alloc(1)
+    with pytest.raises(ValueError, match="share of unallocated"):
+        a.share([ids[0] + 1])    # never handed out
+    a.release(ids)
+    with pytest.raises(ValueError, match="share of unallocated"):
+        a.share(ids)             # released back to the free list
+    with pytest.raises(ValueError, match="NULL_BLOCK"):
+        a.share([0])
+
+
+def test_cached_blocks_park_in_lru_and_revive():
+    """A registered block at refcount 0 parks in the index LRU (bytes kept,
+    lazily reclaimable) instead of returning to the free list; sharing it
+    revives it; allocation pressure reclaims coldest-first."""
+    idx = PrefixIndex(BS)
+    a = BlockAllocator(6, prefix_index=idx)   # blocks 1..5
+    ids = a.alloc(3)
+    for j, b in enumerate(ids):
+        idx.register(100 + j, b)
+    a.release(ids)
+    assert a.n_free == 2 and a.n_cached == 3 and a.n_allocated == 0
+    assert a.n_available == 5
+    # a hit revives the cached block without touching the free list
+    assert idx.match([100, 101]) == ids[:2]
+    a.share(ids[:2])
+    assert a.n_cached == 1 and a.refcount(ids[0]) == 1
+    a.release(ids[:2])
+    # free list is the fast path: alloc(2) takes the 2 free blocks...
+    got = a.alloc(2)
+    assert set(got).isdisjoint(ids)
+    # ...and only a shortfall evicts, coldest (ids[2], released first) first
+    got2 = a.alloc(1)
+    assert got2 == [ids[2]]
+    assert not idx.contains_block(ids[2])     # index entry dropped
+    assert idx.match([102]) == []
+
+
+def test_chain_is_prefix_consistent():
+    toks = np.arange(40, dtype=np.int32)
+    h = PrefixIndex.chain(toks, BS)
+    assert len(h) == 2                        # trailing partial block unhashed
+    assert h == PrefixIndex.chain(toks[:32], BS)   # chain only sees full blocks
+    other = toks.copy()
+    other[20] += 1                            # diverge inside block 1
+    h2 = PrefixIndex.chain(other, BS)
+    assert h2[0] == h[0] and h2[1] != h[1]
+
+
+# ------------------------------------------------------------ COW mechanics
+
+
+def test_cow_fork_leaves_source_block_untouched(small_model):
+    """The copy-on-write fork duplicates a block's bytes into the private
+    destination and must not disturb the source (other requests keep
+    reading it) — in both cache modes."""
+    cfg, model, params = small_model
+    for spec in (None, "fp4_e2m1"):
+        eng = Engine(model, params, CTX, max_slots=1, max_len=64,
+                     cache_dtype=jnp.float32, prefill_chunk=32,
+                     prefix_cache=True, cache_spec=spec, donate_cache=False)
+        # write a real prompt into the pools so block contents are nontrivial
+        eng.run([Request(prompt=np.arange(32, dtype=np.int32),
+                         max_new_tokens=2)])
+        leaves = lambda st: [np.asarray(x).copy()
+                             for x in jax.tree.leaves(
+                                 {"k": st["pools_k"], "v": st["pools_v"]})]
+        before = leaves(eng._state)
+        state = eng._cow_fn(eng._state, jnp.int32(1), jnp.int32(3))
+        after = leaves(state)
+        for b, a in zip(before, after):
+            np.testing.assert_array_equal(b[1], a[1])   # source untouched
+            np.testing.assert_array_equal(a[3], b[1])   # dest is the copy
+            np.testing.assert_array_equal(b[2], a[2])   # bystander untouched
+
+
+def test_engine_full_duplicate_prompt_cow_parity(small_model):
+    """Identical prompts served back-to-back on one slot: the second (and
+    third) requests take the full-match COW path — share every prompt
+    block, fork the tail, recompute only the last token — and still decode
+    exactly what an uncached engine decodes."""
+    cfg, model, params = small_model
+    prompt = (np.arange(32, dtype=np.int32) * 7) % cfg.vocab_size
+    mk = lambda: [Request(prompt=prompt.copy(), max_new_tokens=5)
+                  for _ in range(3)]
+    on = Engine(model, params, CTX, max_slots=1, max_len=64,
+                cache_dtype=jnp.float32, prefill_chunk=32, prefix_cache=True)
+    out = [r.output.copy() for r in on.run(mk())]
+    # requests 2 and 3 each skipped L-1 tokens => the COW fork left the
+    # registered source blocks valid for the third request too
+    skipped = [t.n_cached_prompt for t in
+               sorted(on.stats.timings, key=lambda t: t.arrival_s)]
+    assert skipped == [0, 31, 31]
+    off = Engine(model, params, CTX, max_slots=1, max_len=64,
+                 cache_dtype=jnp.float32, prefill_chunk=32)
+    ref = [r.output.copy() for r in off.run(mk())]
+    for a, b in zip(out, ref):
+        np.testing.assert_array_equal(a, b)
+    assert on.prefill_cache_size() == 1 and on.decode_cache_size() == 1
+
+
+@pytest.mark.parametrize("spec,dtype", [("fp4_e2m1", jnp.float32),
+                                        (None, jnp.bfloat16)])
+def test_engine_full_duplicate_lossy_pools_exact(small_model, spec, dtype):
+    """On LOSSY pools (quantized wire format, or a cache dtype below the
+    compute dtype) the 1-token COW recompute would read the final chunk's
+    history at pool precision where the cold run attended it in compute
+    precision — so the engine must instead resume full-prompt matches at
+    the last chunk-aligned boundary, which re-runs the writer's exact
+    program: outputs identical to the uncached engine, tail chunk
+    recomputed (L - chunk tokens skipped, not L-1)."""
+    cfg, model, params = small_model
+    prompt = (np.arange(64, dtype=np.int32) * 13) % cfg.vocab_size
+    mk = lambda: [Request(prompt=prompt.copy(), max_new_tokens=5)
+                  for _ in range(2)]
+    on = Engine(model, params, CTX, max_slots=1, max_len=96,
+                cache_dtype=dtype, prefill_chunk=32, prefix_cache=True,
+                cache_spec=spec)
+    assert not on._exact_pools
+    out = [r.output.copy() for r in on.run(mk())]
+    skipped = [t.n_cached_prompt for t in
+               sorted(on.stats.timings, key=lambda t: t.arrival_s)]
+    assert skipped == [0, 32]     # aligned resume, not the L-1 COW path
+    off = Engine(model, params, CTX, max_slots=1, max_len=96,
+                 cache_dtype=dtype, prefill_chunk=32, cache_spec=spec)
+    ref = [r.output.copy() for r in off.run(mk())]
+    for a, b in zip(out, ref):
+        np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------------- engine level
+
+
+def _shared_prefix_requests(cfg, n=5, shared=64, suffix=32):
+    rng = np.random.default_rng(3)
+    pre = rng.integers(0, cfg.vocab_size, shared).astype(np.int32)
+    return [Request(prompt=np.concatenate(
+                        [pre, rng.integers(0, cfg.vocab_size, suffix)
+                         .astype(np.int32)]),
+                    max_new_tokens=4, arrival_s=0.002 * i)
+            for i in range(n)]
+
+
+def test_engine_warm_outputs_match_cold(small_model):
+    """Shared-system-prompt traffic: with the prefix cache on, warm requests
+    skip prefill work but must emit exactly the tokens the uncached engine
+    emits (matches resume chunk-aligned, so the recomputed suffix is the
+    same program over the same bytes)."""
+    cfg, model, params = small_model
+    mk = lambda: _shared_prefix_requests(cfg)
+    off = Engine(model, params, CTX, max_slots=2, max_len=128,
+                 cache_dtype=jnp.float32, prefill_chunk=32)
+    ref = [r.output.copy() for r in off.run(mk())]
+    on = Engine(model, params, CTX, max_slots=2, max_len=128,
+                cache_dtype=jnp.float32, prefill_chunk=32, prefix_cache=True)
+    out = [r.output.copy() for r in on.run(mk())]
+    for a, b in zip(out, ref):
+        np.testing.assert_array_equal(a, b)
+    s = on.stats.summary()
+    assert s["prefill_tokens_skipped"] > 0
+    assert 0 < s["prefix_hit_rate"] <= 1
+    assert on.prefill_cache_size() == 1
+    assert on.decode_cache_size() == 1
+    # every block accounted for: free + cached partitions the pool
+    assert on.allocator.n_free + on.allocator.n_cached == on.n_blocks - 1
+    assert on.allocator.n_allocated == 0
+
+
+def test_engine_wire_pools_share_prefix(small_model):
+    """Quantized wire blocks are deterministic post-quantization bytes, so
+    prefix sharing works identically on fp4 pools: warm outputs match the
+    uncached fp4 engine token-for-token."""
+    cfg, model, params = small_model
+    mk = lambda: _shared_prefix_requests(cfg, n=4)
+    off = Engine(model, params, CTX, max_slots=2, max_len=128,
+                 cache_dtype=jnp.float32, prefill_chunk=32,
+                 cache_spec="fp4_e2m1")
+    ref = [r.output.copy() for r in off.run(mk())]
+    on = Engine(model, params, CTX, max_slots=2, max_len=128,
+                cache_dtype=jnp.float32, prefill_chunk=32,
+                cache_spec="fp4_e2m1", prefix_cache=True)
+    out = [r.output.copy() for r in on.run(mk())]
+    for a, b in zip(out, ref):
+        np.testing.assert_array_equal(a, b)
+    assert on.stats.summary()["prefill_tokens_skipped"] > 0
+    assert on.prefill_cache_size() == 1 and on.decode_cache_size() == 1
+
+
+def test_eviction_releases_shared_blocks(small_model):
+    """LIFO preemption of a slot whose table maps shared blocks must RELEASE
+    them (drop one reference), not free them: the earlier request keeps
+    decoding against the same blocks, outputs match an unconstrained run,
+    and the pool partition is conserved at the end."""
+    cfg, model, params = small_model
+    mk = lambda: _shared_prefix_requests(cfg, n=3, shared=32, suffix=16)
+    for r in mk():
+        assert len(r.prompt) == 48
+    tiny = Engine(model, params, CTX, max_slots=2, max_len=80, block_size=16,
+                  n_blocks=6, cache_dtype=jnp.float32, prefill_chunk=32,
+                  prefix_cache=True)
+    out = [r.output.copy() for r in tiny.run(mk())]
+    assert tiny.stats.summary()["n_preemptions"] >= 1
+    assert tiny.allocator.n_free + tiny.allocator.n_cached == tiny.n_blocks - 1
+    assert tiny.allocator.n_allocated == 0
+    big = Engine(model, params, CTX, max_slots=2, max_len=80, block_size=16,
+                 cache_dtype=jnp.float32, prefill_chunk=32, prefix_cache=True)
+    ref = [r.output.copy() for r in big.run(mk())]
+    for a, b in zip(out, ref):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_prefix_cache_requires_chunked_prefill(small_model):
+    cfg, model, params = small_model
+    with pytest.raises(ValueError, match="chunked prefill"):
+        Engine(model, params, CTX, max_slots=2, max_len=64,
+               prefill_chunk=0, prefix_cache=True)
+    hybrid_cfg = fp32_reduced("jamba-v0.1-52b")
+    hm = Model(hybrid_cfg)
+    hp = hm.init_params(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="chunked prefill"):
+        Engine(hm, hp, CTX, max_slots=2, max_len=48, prefix_cache=True)
