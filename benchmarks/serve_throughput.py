@@ -29,6 +29,15 @@ the full prompt) vs Sarathi-style chunked prefill interleaved with decode,
 reporting the inter-token-latency (TPOT) tail each produces under the same
 traffic in each cache mode.
 
+With ``--token-budget`` the run adds the dispatch-side comparison: the
+split chunk-then-decode scheduler (two program dispatches per step) vs the
+unified mixed-batch token-budget step (the whole step in one program),
+asserting token-identical outputs, compile-once, and strictly fewer
+dispatches per request in each cache mode — the per-step overhead the
+mixed step halves is exactly the non-compute cost that dominates small
+batches (and, under TP, each dispatch is a full set of per-layer
+collective launches).
+
 With ``--shared-prefix-len`` the run adds the prefix-cache comparison: the
 same Poisson traffic whose prompts share a system-prompt-style prefix, with
 automatic prefix caching off vs on, reporting cold vs warm TTFT, the
@@ -79,13 +88,15 @@ def build_requests(n, prompt_len, new_tokens, rate_hz, vocab, seed=0):
 
 def run_policy(name, policy, model, params, mesh, args, *,
                cache_spec=None, n_blocks=None, cache_dtype=jnp.float32,
-               prefill_chunk=None, prefix_cache=False, requests_fn=None):
+               prefill_chunk=None, prefix_cache=False, token_budget=None,
+               requests_fn=None):
     ctx = make_context(mesh, None, policy=policy)
     engine = Engine(model, params, ctx, max_slots=args.slots,
                     max_len=args.prompt_len + args.new_tokens,
                     block_size=args.block_size, cache_dtype=cache_dtype,
                     cache_spec=cache_spec, n_blocks=n_blocks,
-                    prefill_chunk=prefill_chunk, prefix_cache=prefix_cache)
+                    prefill_chunk=prefill_chunk, prefix_cache=prefix_cache,
+                    token_budget=token_budget)
     build = requests_fn or (lambda: build_requests(
         args.requests, args.prompt_len, args.new_tokens, args.rate,
         model.cfg.vocab_size))
@@ -123,9 +134,17 @@ def run_policy(name, policy, model, params, mesh, args, *,
         },
         "preemptions": s["n_preemptions"],
         "prefill_chunk": engine.prefill_chunk,
+        "token_budget": engine.token_budget,
         "prefix_cache": engine.prefix_cache,
         "prefill_tokens_skipped": s["prefill_tokens_skipped"],
         "prefix_hit_rate": round(s["prefix_hit_rate"], 4),
+        "steps": s["n_steps"],
+        "dispatches": s["n_dispatches"],
+        "dispatches_per_request": round(s["n_dispatches"]
+                                        / max(1, s["n_requests"]), 2),
+        "tokens_per_step_mean": round(s["tokens_per_step_mean"], 2),
+        "prefill_tokens": s["prefill_tokens"],
+        "decode_tokens": s["decode_tokens"],
         "decode_compilations": engine.decode_cache_size(),
         "prefill_compilations": engine.prefill_cache_size(),
     }
@@ -219,9 +238,14 @@ def compare_prefill_modes(model, params, mesh, args):
         rec_w, out_w, eng_w = run_policy(
             f"{cname}/whole", NO_COMPRESSION, model, params, mesh, args,
             cache_spec=cspec, prefill_chunk=0)
+        # token_budget=0: this comparison isolates the prefill SCHEDULING
+        # axis (whole-prompt HOL blocking vs chunked interleaving) on the
+        # split scheduler; the step-fusion axis has its own comparison
+        # (compare_step_modes), where the per-token history gather of the
+        # flattened program doesn't confound the long-prompt TPOT numbers
         rec_c, out_c, eng_c = run_policy(
             f"{cname}/chunk{chunk}", NO_COMPRESSION, model, params, mesh,
-            args, cache_spec=cspec, prefill_chunk=chunk)
+            args, cache_spec=cspec, prefill_chunk=chunk, token_budget=0)
         # the chunk program must compile exactly once across the whole mix
         # of prompt lengths (vs one whole-prompt program per length bucket)
         assert eng_c.prefill_cache_size() == 1, eng_c.prefill_cache_size()
@@ -244,6 +268,64 @@ def compare_prefill_modes(model, params, mesh, args):
             "tpot_p95_chunked_lower": bool(
                 rec_c["tpot_ms"]["p95"] < rec_w["tpot_ms"]["p95"]),
             "token_match_vs_whole": round(match, 4),
+        })
+    return out
+
+
+def compare_step_modes(model, params, mesh, args):
+    """Dispatch-side comparison: the split scheduler (one prefill-chunk
+    program, then one batched-decode program — two dispatches per step) vs
+    the unified mixed-batch token-budget step (the whole step in ONE
+    program), under the same Poisson traffic, in each requested cache mode.
+
+    The mixed step's win is pure overhead removal: per-request outputs are
+    asserted TOKEN-IDENTICAL to the split run (the mixed program preserves
+    the split path's precision semantics per token class, in bf16 and fp4
+    pools alike), the unified program must have compiled exactly once, and
+    the run must have dispatched strictly fewer programs per request —
+    under a TP mesh each dispatch is a full set of per-layer collective
+    launches, so fewer dispatches means proportionally fewer collective
+    launches per served token.
+    """
+    chunk = args.prefill_chunk or 2 * args.block_size
+    budget = args.token_budget or chunk + args.slots
+    cache_modes = [("bf16", None)]
+    if args.cache_spec and KVCacheSpec.parse(args.cache_spec).quantized:
+        spec = KVCacheSpec.parse(args.cache_spec)
+        cache_modes.append((spec.mx.name, spec))
+    print(f"\n-- step modes: split (chunk+decode) vs mixed "
+          f"(token budget {budget}, chunk {chunk}) --")
+    out = []
+    for cname, cspec in cache_modes:
+        rec_s, out_s, eng_s = run_policy(
+            f"{cname}/split", NO_COMPRESSION, model, params, mesh, args,
+            cache_spec=cspec, prefill_chunk=chunk, token_budget=0)
+        rec_m, out_m, eng_m = run_policy(
+            f"{cname}/mixed", NO_COMPRESSION, model, params, mesh, args,
+            cache_spec=cspec, prefill_chunk=chunk, token_budget=budget)
+        # the unified program compiles exactly once across the traffic mix
+        assert eng_m.prefill_cache_size() == 1, eng_m.prefill_cache_size()
+        assert eng_m.decode_cache_size() == 1, eng_m.decode_cache_size()
+        # identical outputs: the refactor removes dispatches, not tokens
+        for i, (a, b) in enumerate(zip(out_m, out_s)):
+            assert np.array_equal(a, b), (
+                f"[{cname}] request {i} diverged between mixed and split")
+        assert rec_m["dispatches"] < rec_s["dispatches"], (
+            rec_m["dispatches"], rec_s["dispatches"])
+        ratio = rec_s["dispatches"] / max(1, rec_m["dispatches"])
+        print(f"  [{cname}] dispatches/request "
+              f"{rec_s['dispatches_per_request']:.1f} -> "
+              f"{rec_m['dispatches_per_request']:.1f} ({ratio:.2f}x fewer), "
+              f"tokens/step {rec_s['tokens_per_step_mean']:.1f} -> "
+              f"{rec_m['tokens_per_step_mean']:.1f}, token match: exact")
+        out.append({
+            "cache_mode": cname,
+            "chunk": chunk,
+            "token_budget": budget,
+            "split": rec_s, "mixed": rec_m,
+            "dispatch_ratio": round(ratio, 3),
+            "mixed_fewer_dispatches": True,
+            "token_match_vs_split": 1.0,
         })
     return out
 
@@ -372,6 +454,12 @@ def main():
                     help="also compare whole-prompt vs chunked prefill at "
                          "this chunk size (tokens per engine step; 0 picks "
                          "hol-prompt-len/4 automatically)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="also compare the split chunk+decode scheduler vs "
+                         "the unified mixed-batch step at this per-step "
+                         "token budget (0 picks prefill_chunk + slots "
+                         "automatically), with token-match, compile-once, "
+                         "and fewer-dispatches asserts in each cache mode")
     ap.add_argument("--shared-prefix-len", type=int, default=0,
                     help="also compare cold vs warm TTFT under traffic whose "
                          "prompts share a prefix of this many tokens, with "
@@ -405,6 +493,8 @@ def main():
                    prefill_chunk=args.prefill_chunk)[0],
     ]
     result = {"config": vars(args), "tp": tp, "records": records}
+    if args.token_budget is not None:
+        result["step_modes"] = compare_step_modes(model, params, mesh, args)
     if args.prefill_chunk is not None:
         result["prefill_modes"] = compare_prefill_modes(model, params, mesh,
                                                         args)

@@ -34,8 +34,13 @@ def main():
                     help="use a (data, model) mesh over host devices")
     ap.add_argument("--steps", type=int, default=150)
     ap.add_argument("--prefill-chunk", type=int, default=None,
-                    help="prompt tokens per engine step (chunked prefill; "
-                         "0 = whole-prompt, default auto)")
+                    help="prompt tokens per PREFILLING slot per engine step "
+                         "(chunked prefill; 0 = whole-prompt, default auto)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="flattened tokens per unified mixed-batch step "
+                         "(prefill chunks + decode batch in one program "
+                         "dispatch; 0 = split chunk+decode steps, default "
+                         "auto: prefill_chunk + slots)")
     ap.add_argument("--prefix-cache", type=int, default=1, choices=[0, 1],
                     help="enable prefix caching on the rows marked +prefix "
                          "(0 drops those rows back to cold prefills)")
@@ -72,11 +77,12 @@ def main():
     ]:
         prefix = prefix and bool(args.prefix_cache)
         ctx = make_context(mesh, None, policy=policy)
-        # chunked prefill by default: prompts stream into the paged pools
-        # interleaved with decode (DESIGN.md §Chunked prefill)
+        # unified mixed-batch step by default: each engine step packs
+        # prefill chunks + the decode batch into one program dispatch
+        # (DESIGN.md §Mixed step)
         engine = Engine(model, state["params"], ctx, max_slots=4, max_len=192,
                         cache_spec=cache_spec, prefill_chunk=args.prefill_chunk,
-                        prefix_cache=prefix)
+                        token_budget=args.token_budget, prefix_cache=prefix)
         # compile warmup; the staggered duplicate also compiles the prefix
         # cache's COW block-fork program (it admits after the first request
         # has published its blocks, so it full-matches)
@@ -97,6 +103,8 @@ def main():
               f"served TTFT p50 {s['ttft_p50_s']*1e3:.1f} ms, "
               f"TPOT p95 {s['tpot_p95_s']*1e3:.2f} ms, "
               f"{s['tokens_per_s']:.1f} tok/s, "
+              f"{s['n_dispatches']} dispatches/"
+              f"{s['n_steps']} steps, "
               f"kv pools {engine.kv_pool_bytes()/1e6:.2f} MB"
               + (f", prefix-skipped {s['prefill_tokens_skipped']} tok"
                  if prefix else ""))

@@ -11,10 +11,16 @@ default) or an MX scheme (``fp4_e2m1``, or a full name like
 resident KV blocks in the same HBM at a small quantization cost
 (DESIGN.md §Quantized cache).
 
-``--prefill-chunk`` sets the per-step prompt-token budget for chunked
+``--prefill-chunk`` sets the per-slot prompt-token budget for chunked
 prefill (DESIGN.md §Chunked prefill): prompts stream into the paged pools
 chunk by chunk, interleaved with batched decode, instead of stalling every
 running decode for a whole-prompt prefill. 0 forces whole-prompt prefill.
+
+``--token-budget`` sizes the unified mixed-batch step (DESIGN.md §Mixed
+step): each engine step flattens up to this many tokens — several slots'
+prefill chunks plus every decode token — into ONE program dispatch
+(default ``prefill_chunk + slots``; 0 keeps the split chunk-then-decode
+scheduler for comparison).
 
 ``--prefix-cache 1`` turns on automatic prefix caching (docs/serving.md):
 requests whose prompts share a prefix (system prompts, few-shot templates)
@@ -55,11 +61,18 @@ def main():
                     help="KV pool storage: 'bf16' (dense) or an MX scheme "
                          "('fp4_e2m1', 'fp5_e2m2_b16_e8m0', ...)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
-                    help="prompt tokens prefillable per engine step (chunked "
-                         "prefill, interleaved with decode). Default: "
-                         "2*block_size for pure-attention archs, 0 "
-                         "(whole-prompt) otherwise; pass 0 to force "
-                         "whole-prompt prefill")
+                    help="prompt tokens prefillable per PREFILLING slot per "
+                         "engine step (chunked prefill, interleaved with "
+                         "decode). Default: 2*block_size for pure-attention "
+                         "archs, 0 (whole-prompt) otherwise; pass 0 to "
+                         "force whole-prompt prefill")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="flattened tokens per engine step for the unified "
+                         "mixed-batch program (several slots' prefill "
+                         "chunks + all decode tokens in ONE dispatch). "
+                         "Default: prefill_chunk + slots on chunk-capable "
+                         "archs; pass 0 to force the split chunk-then-"
+                         "decode scheduler (two dispatches per step)")
     ap.add_argument("--prefix-cache", type=int, default=0, choices=[0, 1],
                     help="share KV blocks across requests with a common "
                          "prompt prefix (refcounted blocks + hash-chain "
@@ -87,12 +100,15 @@ def main():
     engine = Engine(model, params, ctx, max_slots=args.slots, max_len=max_len,
                     block_size=args.block_size, cache_spec=args.cache_spec,
                     prefill_chunk=args.prefill_chunk,
+                    token_budget=args.token_budget,
                     prefix_cache=bool(args.prefix_cache))
+    step = (f"mixed, {engine.token_budget}-token budget "
+            f"({engine.prefill_chunk} tokens/chunk)" if engine.token_budget
+            else (f"split, chunked {engine.prefill_chunk} tokens/step"
+                  if engine.prefill_chunk else "split, whole-prompt"))
     print(f"kv cache: {engine.cache_spec.describe()} "
-          f"({engine.kv_pool_bytes() / 1e6:.2f} MB pools); prefill: "
-          + (f"chunked, {engine.prefill_chunk} tokens/step"
-             if engine.prefill_chunk else "whole-prompt")
-          + f"; prefix cache: {'on' if engine.prefix_cache else 'off'}")
+          f"({engine.kv_pool_bytes() / 1e6:.2f} MB pools); step: {step}"
+          f"; prefix cache: {'on' if engine.prefix_cache else 'off'}")
 
     n_req = args.requests or args.slots
     rng = np.random.default_rng(0)
@@ -127,6 +143,9 @@ def main():
     s = engine.stats.summary()
     print(f"{s['n_requests']} requests, {s['n_generated']} tokens in "
           f"{wall:.2f}s wall (incl compile); steady tokens/s={s['tokens_per_s']:.1f}")
+    print(f"dispatch: {s['n_steps']} steps, {s['n_dispatches']} program "
+          f"dispatches, {s['tokens_per_step_mean']:.1f} tokens/step "
+          f"({s['prefill_tokens']} prefill + {s['decode_tokens']} decode)")
     if engine.prefix_cache:
         print(f"prefix cache: {s['prefill_tokens_skipped']} prompt tokens "
               f"skipped (hit rate {s['prefix_hit_rate']:.2f})")

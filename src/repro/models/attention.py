@@ -31,7 +31,7 @@ from repro.models.common import Initializer, apply_rope, init_linear, make_rope,
 
 __all__ = ["init_attention", "KVCache", "init_cache", "attention",
            "attention_specs", "paged_attention_decode", "paged_attention_chunk",
-           "quantize_kv_pages"]
+           "paged_attention_mixed", "quantize_kv_pages"]
 
 NEG_INF = -1e30
 _Q_CHUNK = 1024
@@ -84,10 +84,14 @@ def _qkv(ctx: TPContext, params, x, cfg: ModelConfig, positions):
 
 
 def _attend_block(q, k, v, q_pos, t_pos, *, causal, window, scale, kv_heads):
-    """q (B,Sq,H,hd); k/v flat (B,T,kv_dim); t_pos (T,). -> (B,Sq,H*hd).
+    """q (B,Sq,H,hd); k/v flat (B,T,kv_dim); t_pos (T,) or (B,T). ->
+    (B,Sq,H*hd).
 
     q_pos is (Sq,) when positions are shared across the batch, or (B,Sq)
-    for per-slot positions (continuous-batching decode)."""
+    for per-slot positions (continuous-batching decode). t_pos is (T,) when
+    key positions are shared across the batch, or (B,T) when each batch row
+    attends its own gathered sequence (the mixed token-budget step, where
+    every flattened token is its own batch row)."""
     B, Sq, H, hd = q.shape
     T = k.shape[1]
     KV = kv_heads
@@ -96,12 +100,13 @@ def _attend_block(q, k, v, q_pos, t_pos, *, causal, window, scale, kv_heads):
     vh = v.reshape(B, T, KV, hd)
     qg = q.reshape(B, Sq, KV, G, hd)
     scores = jnp.einsum("bsngd,btnd->bnsgt", qg, kh).astype(jnp.float32) * scale
+    tp = t_pos[:, None, :] if t_pos.ndim == 2 else t_pos[None, :]
     if causal:
-        valid = t_pos[None, :] <= q_pos[..., :, None]
+        valid = tp <= q_pos[..., :, None]
     else:
-        valid = jnp.broadcast_to(t_pos >= 0, q_pos.shape + (T,))
+        valid = jnp.broadcast_to(tp >= 0, q_pos.shape[:-1] + (Sq, T))
     if window is not None:
-        valid = valid & (t_pos[None, :] > q_pos[..., :, None] - window)
+        valid = valid & (tp > q_pos[..., :, None] - window)
     if valid.ndim == 2:
         valid = valid[None]                        # (1 or B, Sq, T)
     scores = jnp.where(valid[:, None, :, None, :], scores, NEG_INF)
@@ -404,6 +409,122 @@ def paged_attention_chunk(
 
     out = constrain(ctx, out, ctx.batch, None, a)
     y = row_linear(ctx, out, params["wo"]["w"], n_tokens=B * C)
+    return y, pool_k, pool_v
+
+
+def paged_attention_mixed(
+    ctx: TPContext,
+    params,
+    x: jnp.ndarray,                    # (1, T, d_model) — the flattened budget
+    cfg: ModelConfig,
+    *,
+    positions: jnp.ndarray,            # (T,) int32 per-token positions
+    slot_ids: jnp.ndarray,             # (T,) int32 owning slot per token
+    slot_starts: jnp.ndarray,          # (n_slots,) int32 pre-step history end
+    valid: jnp.ndarray,                # (T,) bool — False rows are budget pads
+    is_decode: jnp.ndarray,            # (T,) bool — decode vs prefill token
+    tables: jnp.ndarray,               # (n_slots, max_blocks) int32 block ids
+    pool_k,                            # (n_blocks, block_size, kv_dim) dense,
+    pool_v,                            #   or MXCompressed wire pools
+    window: Optional[int] = None,
+    cache_spec: Optional[KVCacheSpec] = None,
+):
+    """ONE mixed-batch token-budget step: several slots' prefill chunks plus
+    one decode token per DECODING slot, flattened into a single (1, T) batch
+    and attended against the paged cache in one program.
+
+    Every flattened token becomes its own attention batch row: token t
+    gathers ITS slot's paged history through ``tables[slot_ids[t]]`` (valid
+    below ``slot_starts[slot_ids[t]]`` — everything written before this
+    step), and additionally attends the current batch's same-slot tokens at
+    positions <= its own. Precision mirrors the split chunk/decode pair
+    exactly: prefill tokens see same-chunk neighbours in COMPUTE precision
+    (what ``paged_attention_chunk`` did), while a decode token sees its own
+    just-written K/V at POOL precision (dense-dtype cast or MX round-trip —
+    what ``paged_attention_decode`` reads back after its scatter). All new
+    K/V is then appended into the pools through the shared
+    ``quantize_kv_pages`` codec entry; pad rows (``valid`` False) write into
+    the reserved null block. Shapes depend only on (token_budget, n_slots,
+    max_blocks), so the engine compiles this exactly once.
+
+    Returns (out (1, T, d_model), pool_k, pool_v).
+    """
+    B, T = x.shape[:2]
+    a = ctx.axis if ctx.tp else None
+    scale = cfg.head_dim**-0.5
+    quantized = cache_spec is not None and cache_spec.quantized
+
+    q, k_new, v_new = _qkv(ctx, params, x, cfg, positions[None, :])
+    qt = q[0][:, None]                                  # (T, 1, H, hd)
+
+    my_tables = tables[slot_ids]                        # (T, max_blocks)
+    nb = tables.shape[1]
+    bs = (pool_k.payload if quantized else pool_k).shape[1]
+    cap = nb * bs
+
+    # per-row history: the slot's logical sequence below its pre-step write
+    # position (everything this step appends is attended in-batch instead)
+    start = slot_starts[slot_ids]                       # (T,)
+    t_hist = jnp.arange(cap, dtype=jnp.int32)[None, :]  # (1, cap)
+    t_hist = jnp.where(t_hist < start[:, None], t_hist, _T_INVALID)
+    if quantized:
+        mxs = cache_spec.mx
+        k_hist = mx.dequantize(MXCompressed(
+            pool_k.payload[my_tables].reshape(T, cap, -1),
+            pool_k.scales[my_tables].reshape(T, cap, -1)), mxs,
+            out_dtype=q.dtype)
+        v_hist = mx.dequantize(MXCompressed(
+            pool_v.payload[my_tables].reshape(T, cap, -1),
+            pool_v.scales[my_tables].reshape(T, cap, -1)), mxs,
+            out_dtype=q.dtype)
+        kq, vq = quantize_kv_pages(k_new[0], v_new[0], mxs)
+        k_rt = mx.dequantize(kq, mxs, out_dtype=q.dtype)
+        v_rt = mx.dequantize(vq, mxs, out_dtype=q.dtype)
+    else:
+        k_hist = pool_k[my_tables].reshape(T, cap, -1).astype(q.dtype)
+        v_hist = pool_v[my_tables].reshape(T, cap, -1).astype(q.dtype)
+        k_rt = k_new[0].astype(pool_k.dtype).astype(q.dtype)
+        v_rt = v_new[0].astype(pool_v.dtype).astype(q.dtype)
+
+    # in-batch K/V: decode tokens read their own write back at pool
+    # precision (split-decode semantics); prefill tokens stay in compute
+    # precision (split-chunk semantics)
+    k_step = jnp.where(is_decode[:, None], k_rt, k_new[0].astype(q.dtype))
+    v_step = jnp.where(is_decode[:, None], v_rt, v_new[0].astype(q.dtype))
+    same = (slot_ids[None, :] == slot_ids[:, None]) & valid[None, :]
+    t_step = jnp.where(same, positions[None, :], _T_INVALID)    # (T, T)
+
+    k_all = jnp.concatenate(
+        [k_hist, jnp.broadcast_to(k_step[None], (T,) + k_step.shape)], axis=1)
+    v_all = jnp.concatenate(
+        [v_hist, jnp.broadcast_to(v_step[None], (T,) + v_step.shape)], axis=1)
+    t_pos = jnp.concatenate([t_hist, t_step], axis=1)           # (T, cap+T)
+    out = _attend_block(qt, k_all, v_all, positions[:, None], t_pos,
+                        causal=True, window=window, scale=scale,
+                        kv_heads=cfg.n_kv_heads)
+    out = out[:, 0][None]                               # (1, T, H*hd)
+
+    # append every real token's K/V into the pools; pads fall into the null
+    # block. Same codec entry + constrain discipline as the split writers.
+    blk = jnp.where(valid & (positions < cap),
+                    my_tables[jnp.arange(T), jnp.clip(positions // bs, 0, nb - 1)],
+                    0)
+    offs = positions % bs
+    if quantized:
+        pool_k = constrain_wire_pool(ctx, MXCompressed(
+            payload=pool_k.payload.at[blk, offs].set(kq.payload),
+            scales=pool_k.scales.at[blk, offs].set(kq.scales)))
+        pool_v = constrain_wire_pool(ctx, MXCompressed(
+            payload=pool_v.payload.at[blk, offs].set(vq.payload),
+            scales=pool_v.scales.at[blk, offs].set(vq.scales)))
+    else:
+        pool_k = pool_k.at[blk, offs].set(k_new[0].astype(pool_k.dtype))
+        pool_v = pool_v.at[blk, offs].set(v_new[0].astype(pool_v.dtype))
+        pool_k = constrain(ctx, pool_k, None, None, a)
+        pool_v = constrain(ctx, pool_v, None, None, a)
+
+    out = constrain(ctx, out, ctx.batch, None, a)
+    y = row_linear(ctx, out, params["wo"]["w"], n_tokens=B * T)
     return y, pool_k, pool_v
 
 

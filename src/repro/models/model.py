@@ -16,7 +16,7 @@ from repro.configs.base import InputShape, ModelConfig
 from repro.core.tp import TPContext, constrain, row_linear
 from repro.models.attention import (
     KVCache, attention, attention_specs, init_attention,
-    paged_attention_chunk, paged_attention_decode,
+    paged_attention_chunk, paged_attention_decode, paged_attention_mixed,
 )
 from repro.models.common import (
     Initializer, embed, init_norm, rms_norm, unembed,
@@ -336,6 +336,84 @@ class Model:
                 x = constrain(ctx, x + out, ctx.batch, None, None)
         x = rms_norm(x, params["final_norm"]["w"])
         x = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+        head = params.get("lm_head", params["embed"])["w"]
+        logits = unembed(ctx, x, head)[:, 0]
+        new_state = {**state, "pools_k": pools_k, "pools_v": pools_v}
+        return logits, new_state
+
+    def mixed_step(self, ctx: TPContext, params, tokens, state, slot_ids,
+                   positions, valid, is_decode, slot_starts, tables,
+                   sample_idx, cache_spec=None) -> Tuple[jnp.ndarray, Any]:
+        """Unified mixed-batch token-budget step (DESIGN.md §Mixed step):
+        several slots' prefill chunks PLUS one token per DECODING slot,
+        flattened into one ``(1, token_budget)`` batch and run as a single
+        program — the engine's whole per-step work in one dispatch.
+
+        tokens (1, T) int32 — the flattened budget, right-padded;
+        slot_ids / positions / valid / is_decode (T,) — per-token owning
+        slot, sequence position, real-vs-pad flag, and decode-vs-prefill
+        flag; slot_starts (n_slots,) int32 — each slot's pre-step write
+        position (history boundary); tables (n_slots, max_blocks) int32;
+        sample_idx (n_slots,) int32 — per slot, the flat index of the token
+        whose logits that slot samples from (its decode token, or the last
+        valid token of its prefill segment; 0/garbage for slots that don't
+        sample this step).
+
+        Per attention layer ``paged_attention_mixed`` gathers each token's
+        slot history from the paged pools, attends it together with the
+        same-slot tokens of the current batch (split-path precision
+        semantics preserved token class by token class), and appends all
+        new K/V into the pools. Shapes depend only on
+        ``(token_budget, n_slots, max_blocks)``, so the engine compiles
+        this exactly once — one program dispatch per step where the split
+        scheduler paid two (chunk + decode). Requires a pure-attention
+        decoder, like ``prefill_chunk``; hybrid archs keep the split
+        whole-prompt + batched-decode path.
+
+        Returns (logits (n_slots, V) at ``sample_idx``, new state).
+        """
+        from repro.models.moe import moe
+        from repro.models.transformer import _has_mlp_sublayer
+
+        cfg = self.cfg
+        if cfg.encoder_decoder:
+            raise ValueError(
+                "mixed_step does not thread encoder cross-attention; "
+                "encoder-decoder models use whole-prompt prefill + "
+                "decode_step_paged")
+        x = embed(ctx, params["embed"]["w"], tokens)
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+        pools_k = list(state["pools_k"])
+        pools_v = list(state["pools_v"])
+        ai = 0
+        for i, spec in enumerate(cfg.layers):
+            if spec.kind != "attn":
+                raise ValueError(
+                    f"mixed_step requires a pure-attention stack; layer "
+                    f"{i} is {spec.kind!r} (use whole-prompt prefill + "
+                    f"decode_step_paged)")
+            lp = params["layers"][i]
+            h = rms_norm(x, lp["ln1"]["w"])
+            out, pools_k[ai], pools_v[ai] = paged_attention_mixed(
+                ctx, lp["core"], h, cfg, positions=positions,
+                slot_ids=slot_ids, slot_starts=slot_starts, valid=valid,
+                is_decode=is_decode, tables=tables, pool_k=pools_k[ai],
+                pool_v=pools_v[ai], window=spec.window,
+                cache_spec=cache_spec)
+            ai += 1
+            x = constrain(ctx, x + out, ctx.batch, None, None)
+            if _has_mlp_sublayer(cfg, spec):
+                h = rms_norm(x, lp["ln2"]["w"])
+                if spec.moe:
+                    out, _ = moe(ctx, lp["moe"], h, cfg)
+                else:
+                    out = mlp(ctx, lp["mlp"], h, cfg)
+                x = constrain(ctx, x + out, ctx.batch, None, None)
+        # logits only at each slot's sampled token: gather the n_slots rows
+        # BEFORE the norm/unembed so the V-sized matmul stays O(n_slots),
+        # not O(token_budget)
+        x = x[0][sample_idx][:, None]                  # (n_slots, 1, d_model)
+        x = rms_norm(x, params["final_norm"]["w"])
         head = params.get("lm_head", params["embed"])["w"]
         logits = unembed(ctx, x, head)[:, 0]
         new_state = {**state, "pools_k": pools_k, "pools_v": pools_v}

@@ -1,7 +1,7 @@
 from repro.serving.engine import Engine, Request
 from repro.serving.kv_cache import (
-    BlockAllocator, PrefixIndex, cache_bytes, cache_specs, check_cache_spec,
-    init_paged_state, paged_cache_bytes,
+    BlockAllocator, MixedBatch, PrefixIndex, build_mixed_batch, cache_bytes,
+    cache_specs, check_cache_spec, init_paged_state, paged_cache_bytes,
 )
 from repro.serving.ttft import (
     HARDWARE, Hardware, RequestTiming, ServeStats, ttft_breakdown, ttft_seconds,
@@ -10,7 +10,7 @@ from repro.serving.ttft import (
 __all__ = [
     "Engine", "Request", "cache_bytes", "cache_specs",
     "BlockAllocator", "PrefixIndex", "check_cache_spec", "init_paged_state",
-    "paged_cache_bytes",
+    "paged_cache_bytes", "MixedBatch", "build_mixed_batch",
     "HARDWARE", "Hardware", "RequestTiming", "ServeStats",
     "ttft_breakdown", "ttft_seconds",
 ]

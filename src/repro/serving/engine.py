@@ -6,14 +6,19 @@ compressed TP collectives pay off; decode is policy-gated to uncompressed
 Architecture, invariants, and the compression gating between prefill and
 decode are documented in DESIGN.md.
 
-Prefill is CHUNKED by default (Sarathi-style token-budget scheduling): each
-engine step spends at most ``prefill_chunk`` prompt tokens on ONE in-flight
-prompt (the ``prefill_chunk`` program — compiled once, prompt-length
-independent) and then runs the batched decode for every live slot, so long
-prompts stream in chunk-by-chunk without stalling running decodes
-(head-of-line blocking) and without the per-length-bucket compile storm.
-Architectures the chunk program can't serve (recurrent layers, vision
-prefix, encoder-decoder) fall back to the whole-prompt prefill/insert pair.
+Prefill is CHUNKED by default (Sarathi-style token-budget scheduling), and
+for pure-attention text archs the whole step is ONE program: every engine
+step flattens up to ``token_budget`` tokens — several PREFILLING slots'
+prompt chunks plus one token per DECODING slot — into a single mixed batch
+and dispatches one ``Model.mixed_step`` program (compiled exactly once;
+shapes depend only on the budget and slot count). That halves program
+dispatches per step vs the split chunk-then-decode pair — on a TP mesh,
+half the collective launches per step — while long prompts still stream in
+chunk-by-chunk without stalling running decodes (head-of-line blocking).
+``token_budget=0`` keeps the split scheduler (one chunk program, then the
+batched decode); architectures the flattened program can't serve
+(recurrent layers, vision prefix, encoder-decoder) fall back to the
+whole-prompt prefill/insert pair plus batched decode.
 
 With ``prefix_cache=True`` the engine additionally shares KV blocks across
 requests with a common prompt prefix (docs/serving.md): full prompt blocks
@@ -49,8 +54,8 @@ from repro.core.tp import TPContext, constrain
 from repro.models.attention import constrain_wire_pool, quantize_kv_pages
 from repro.models.model import Model
 from repro.serving.kv_cache import (
-    BlockAllocator, PrefixIndex, check_cache_spec, init_paged_state,
-    paged_cache_bytes,
+    BlockAllocator, PrefixIndex, build_mixed_batch, check_cache_spec,
+    init_paged_state, paged_cache_bytes,
 )
 from repro.serving.ttft import RequestTiming, ServeStats
 
@@ -124,14 +129,26 @@ class Engine:
     - ``cache_spec`` — pool storage: dense ``cache_dtype`` (default,
       bit-identical to the pre-quantization engine) or an MX wire format
       (``"fp4_e2m1"``; ~3.76x resident blocks per byte).
-    - ``prefill_chunk`` — prompt tokens per engine step; defaults to
-      ``2*block_size`` for pure-attention archs and ``0`` (whole-prompt
-      fallback) otherwise.
+    - ``prefill_chunk`` — prompt tokens per PREFILLING slot per engine
+      step; defaults to ``2*block_size`` for pure-attention archs and ``0``
+      (whole-prompt fallback) otherwise.
+    - ``token_budget`` — flattened tokens per engine step for the unified
+      mixed-batch program (DESIGN.md §Mixed step); defaults to
+      ``prefill_chunk + max_slots`` on chunk-capable archs (every DECODING
+      slot's token plus one full chunk — also the enforced floor, so full
+      split-schedule chunks always fit and packing never truncates one).
+      ``0`` selects the split scheduler (chunk program, then batched
+      decode — two dispatches per step).
     - ``prefix_cache`` — automatic prefix caching over refcounted blocks
       (requires chunked prefill); ``False`` (default) is bit-identical to
       the engine without the feature.
+    - ``persistent_cache`` — keep the paged pools, allocator, and prefix
+      index warm across ``run()`` calls (requires ``prefix_cache``), so a
+      second run of the same system prompt skips its prefill.
     - ``compress_decode`` — lift the paper-§5.2 gating and run decode
       collectives compressed too (default off: decode payloads are small).
+      The mixed step always runs under the prefill context: its collective
+      payloads are budget-sized (chunk-scale), not one-token.
 
     ``run(requests)`` serves a list of ``Request``s and fills their
     ``output``/``ttft_s``/``latency_s``/``timing``; per-run aggregates land
@@ -146,7 +163,9 @@ class Engine:
                  n_blocks: Optional[int] = None, cache_dtype=jnp.bfloat16,
                  cache_spec=None, compress_decode: bool = False,
                  prefill_chunk: Optional[int] = None,
+                 token_budget: Optional[int] = None,
                  prefix_cache: bool = False,
+                 persistent_cache: bool = False,
                  donate_cache: bool = True):
         self.model = model
         self.cfg = model.cfg
@@ -189,6 +208,37 @@ class Engine:
                 "prefill; pass prefill_chunk=0 or leave it unset)")
         self.prefill_chunk = int(prefill_chunk)
 
+        # unified mixed-batch step (DESIGN.md §Mixed step): one token-budget
+        # program per step packing several prefill chunks + the decode batch.
+        # Rides on the chunked scheduler, so it has the same arch gate; 0
+        # selects the split chunk-then-decode path (two dispatches per step).
+        if token_budget is None:
+            token_budget = (self.prefill_chunk + self.n_slots
+                            if self.prefill_chunk else 0)
+        elif token_budget < 0:
+            raise ValueError("token_budget must be >= 0 (0 = split steps)")
+        elif token_budget and not self.prefill_chunk:
+            raise ValueError(
+                "token_budget (the unified mixed-batch step) rides on "
+                "chunked prefill; this engine is whole-prompt "
+                "(prefill_chunk=0 or a non-chunkable architecture)")
+        elif token_budget and token_budget < self.n_slots + self.prefill_chunk:
+            # one decode token per slot (decode is never dropped for
+            # prefill work) PLUS one full chunk: packing only ever places
+            # FULL split-schedule chunks (never budget-truncated ones, so
+            # chunk boundaries — and therefore which tokens attend each
+            # other at compute vs pool precision, and the bytes published
+            # to the prefix index — are identical to the split scheduler's
+            # regardless of packing timing), and this floor guarantees the
+            # earliest-arrival prefilling slot always fits its chunk
+            raise ValueError(
+                f"token_budget ({token_budget}) must cover one decode token "
+                f"per slot plus one full prefill chunk "
+                f"(max_slots={self.n_slots} + prefill_chunk="
+                f"{self.prefill_chunk}); shrink prefill_chunk for a "
+                f"smaller step")
+        self.token_budget = int(token_budget)
+
         # automatic prefix caching (DESIGN.md §Prefix caching): full prompt
         # blocks are published in a hash-chain index and mapped by reference
         # into later requests' block tables. Matching rides on the chunked
@@ -202,6 +252,16 @@ class Engine:
                 "prefix_cache rides on chunked prefill (matches resume at "
                 "the first non-cached token); this engine is whole-prompt "
                 "(prefill_chunk=0 or a non-chunkable architecture)")
+        # cross-run prefix persistence: keep pools + allocator + index warm
+        # across run() calls so a later run's matching prompts skip prefill.
+        # Useless without the index (warm pool bytes are unreachable), so it
+        # requires the prefix cache.
+        self.persistent_cache = bool(persistent_cache)
+        if self.persistent_cache and not self.prefix_cache:
+            raise ValueError(
+                "persistent_cache keeps the prefix index warm across runs; "
+                "it requires prefix_cache=True (warm pool bytes are only "
+                "reachable through the index)")
         # pools store the exact values prefill computed only when they are
         # dense at the model's compute dtype; quantized or down-cast pools
         # are lossy, so a mid-chunk resume would attend pool-precision
@@ -246,14 +306,30 @@ class Engine:
         self._prefill_fns: "collections.OrderedDict[int, tuple]" = \
             collections.OrderedDict()
         self._evicted_prefill_compiles = 0  # compiles lost to LRU drops
-        # ONE chunk program for every prompt length (the tentpole win: the
-        # per-bucket compile storm collapses to a single compilation)
+        # ONE chunk program for every prompt length (the per-bucket compile
+        # storm collapses to a single compilation). Only the split scheduler
+        # dispatches it; the mixed step subsumes it below.
         self._chunk_fn = None
-        if self.prefill_chunk:
+        if self.prefill_chunk and not self.token_budget:
             self._chunk_fn = jax.jit(
                 lambda p, toks, state, row, start, n_valid:
                     model.prefill_chunk(ctx, p, toks, state, row, start,
                                         n_valid, cache_spec=cache_spec),
+                donate_argnums=(2,) if donate_cache else ())
+        # the unified mixed-batch program: the whole step's work (packed
+        # prefill chunks + the decode batch) in ONE dispatch. Runs under the
+        # PREFILL context — its collective payloads are budget-sized, the
+        # large-payload regime where the paper's codec pays — and compiles
+        # exactly once (shapes fixed by token_budget / n_slots / max_blocks).
+        self._mixed_fn = None
+        if self.token_budget:
+            self._mixed_fn = jax.jit(
+                lambda p, toks, state, slot_ids, positions, valid, is_dec,
+                       starts, tables, sample_idx:
+                    model.mixed_step(ctx, p, toks, state, slot_ids,
+                                     positions, valid, is_dec, starts,
+                                     tables, sample_idx,
+                                     cache_spec=cache_spec),
                 donate_argnums=(2,) if donate_cache else ())
         # copy-on-write block fork (prefix caching): duplicate one block's
         # bytes in every attention layer's K/V pool so a slot that must
@@ -276,6 +352,13 @@ class Engine:
             init_paged_state(self.cfg, self.n_slots, self.n_blocks,
                              self.block_size, self.cache_dtype,
                              cache_spec=self.cache_spec))
+        self._soft_reset()
+
+    def _soft_reset(self) -> None:
+        """Per-run scheduling state only: with ``persistent_cache`` the
+        pools/allocator/index survive between runs (a clean previous run
+        leaves every block free or parked in the index LRU), so the next
+        run's matching prompts skip their shared prefill."""
         self._tables = np.zeros((self.n_slots, self.max_blocks), np.int32)
         self._lengths = np.zeros((self.n_slots,), np.int32)
         self._cur = np.zeros((self.n_slots,), np.int32)
@@ -283,18 +366,24 @@ class Engine:
         self._waiting: List[_Work] = []
 
     def decode_cache_size(self) -> int:
-        """Compiled-variant count of the batched decode step (jit-stability
-        witness: stays 1 however requests arrive and leave)."""
+        """Compiled-variant count of the program that advances decode (jit-
+        stability witness: stays 1 however requests arrive and leave). In
+        mixed mode that program IS the unified step."""
+        if self._mixed_fn is not None:
+            return self._mixed_fn._cache_size()
         return self._decode._cache_size()
 
     def prefill_cache_size(self) -> int:
         """Compiled-variant count of the serving-path prefill program
-        (mirror of ``decode_cache_size``). With chunked prefill this counts
-        the single chunk program — it stays 1 across any mix of prompt
-        lengths; on the whole-prompt path it sums the per-bucket programs
-        (what the chunk program exists to collapse). ``measure_ttft``'s
-        bucketed probes are excluded: they always go through the
-        whole-prompt path and are not part of serving."""
+        (mirror of ``decode_cache_size``). In mixed mode this counts the
+        single unified step program; with split chunked prefill, the single
+        chunk program — both stay 1 across any mix of prompt lengths. On
+        the whole-prompt path it sums the per-bucket programs (what the
+        chunk program exists to collapse). ``measure_ttft``'s bucketed
+        probes are excluded: they always go through the whole-prompt path
+        and are not part of serving."""
+        if self._mixed_fn is not None:
+            return self._mixed_fn._cache_size()
         if self._chunk_fn is not None:
             return self._chunk_fn._cache_size()
         return self._evicted_prefill_compiles + sum(
@@ -515,6 +604,7 @@ class Engine:
                 self._state = self._cow_fn(self._state,
                                            jnp.int32(w.blocks[-1]),
                                            jnp.int32(fork[0]))
+                self.stats.record_dispatch(1)  # COW block fork
                 self.allocator.release([w.blocks[-1]])
                 w.blocks[-1] = fork[0]
                 m_tok = L - 1
@@ -533,26 +623,19 @@ class Engine:
         self._tables[slot, :len(w.blocks)] = w.blocks
         self._lengths[slot] = w.pos
 
-    def _prefill_step(self) -> bool:
-        """Run ONE prefill chunk for the earliest-arrival PREFILLING slot —
-        the per-step prompt-token budget (``prefill_chunk`` tokens) that
-        keeps long prefills from stalling running decodes. Blocks covering
-        the chunk are allocated incrementally here, evicting the
-        latest-arrival request under pressure. Returns True if a chunk ran.
-        """
-        pref = [s for s, w in self._running.items() if w.prefilling]
-        if not pref:
-            return False
-        slot = min(pref, key=lambda s: (self._running[s].arrival, s))
-        w = self._running[slot]
-        L = len(w.prompt)
-        n_valid = min(self.prefill_chunk, L - w.pos)
+    def _alloc_for_chunk(self, slot: int, w: _Work, n_valid: int) -> bool:
+        """Allocate the blocks covering ``n_valid`` more prompt tokens for a
+        PREFILLING slot, evicting the latest-arrival request under pressure
+        (LIFO). Returns False when the slot is itself the LIFO victim — it
+        defers in place, keeping the chunks already written (self-preempting
+        would discard them and churn through admit/preempt every step)
+        while earlier-arrival decodes retire and free blocks."""
         need = -(-(w.pos + n_valid) // self.block_size)
         while True:
             got = self.allocator.alloc_to(w.blocks, need)
             if got is not None:
                 self._tables[slot, need - len(got):need] = got
-                break
+                return True
             victim = max(self._running,
                          key=lambda s: (self._running[s].arrival, s))
             if victim == slot:
@@ -562,12 +645,49 @@ class Engine:
                         f"blocks; only {self.allocator.n_available} "
                         f"available and nothing to evict — pool too small "
                         f"for this request")
-                # this slot is the LIFO victim itself: defer in place —
-                # keep the chunks already written (self-preempting would
-                # discard them and churn through admit/preempt every step)
-                # while earlier-arrival decodes retire and free blocks
                 return False
             self._preempt(victim)
+
+    def _advance_prefill(self, slot: int, w: _Work, n_valid: int) -> None:
+        """Account ``n_valid`` freshly-written prompt tokens: advance the
+        slot's write position and publish every prompt block the tokens
+        completed (hash j certifies tokens [0, (j+1)*bs), all now written
+        and immutable)."""
+        old_pos = w.pos
+        w.pos += n_valid
+        self._lengths[slot] = w.pos
+        if self.prefix_index is not None:
+            for j in range(old_pos // self.block_size,
+                           min(w.pos // self.block_size, len(w.hashes))):
+                self.prefix_index.register(w.hashes[j], w.blocks[j])
+
+    def _first_token(self, slot: int, w: _Work, tok: int, now: float) -> None:
+        """Prefill-complete bookkeeping, shared by every prefill flavor
+        (final chunk in mixed/split mode, whole-prompt admission): the
+        sampled token ends PREFILLING and is the TTFT endpoint."""
+        w.prefilling = False
+        self._cur[slot] = tok
+        if w.first_token_t is None:
+            w.first_token_t = now
+        w.tokens.append(tok)
+        w.token_times.append(now)
+        if w.done:
+            self._retire(slot, now)
+
+    def _prefill_step(self) -> int:
+        """Split-scheduler prefill: run ONE chunk for the earliest-arrival
+        PREFILLING slot — the per-step prompt-token budget that keeps long
+        prefills from stalling running decodes. Returns the number of
+        prompt tokens processed (0 if no chunk ran)."""
+        pref = [s for s, w in self._running.items() if w.prefilling]
+        if not pref:
+            return 0
+        slot = min(pref, key=lambda s: (self._running[s].arrival, s))
+        w = self._running[slot]
+        L = len(w.prompt)
+        n_valid = min(self.prefill_chunk, L - w.pos)
+        if not self._alloc_for_chunk(slot, w, n_valid):
+            return 0
 
         tokens = np.zeros((1, self.prefill_chunk), np.int32)
         tokens[0, :n_valid] = w.prompt[w.pos:w.pos + n_valid]
@@ -575,31 +695,109 @@ class Engine:
             self.params, jnp.asarray(tokens), self._state,
             jnp.asarray(self._tables[slot]), jnp.int32(w.pos),
             jnp.int32(n_valid))
-        old_pos = w.pos
-        w.pos += n_valid
-        self._lengths[slot] = w.pos
-        if self.prefix_index is not None:
-            # publish the prompt blocks this chunk completed: hash j
-            # certifies tokens [0, (j+1)*bs), all now written and immutable
-            for j in range(old_pos // self.block_size,
-                           min(w.pos // self.block_size, len(w.hashes))):
-                self.prefix_index.register(w.hashes[j], w.blocks[j])
+        self._advance_prefill(slot, w, n_valid)
         if w.pos >= L:
             # final chunk: its logits (read at the last real token) yield the
             # request's first sampled token, ending PREFILLING
             self._key, sub = jax.random.split(self._key)
             temp = jnp.full((1,), w.req.temperature, jnp.float32)
             tok = int(np.asarray(self._sample(logits, temp, sub))[0])
-            now = time.perf_counter() - self._t0
-            w.prefilling = False
-            self._cur[slot] = tok
-            if w.first_token_t is None:
-                w.first_token_t = now
+            self._first_token(slot, w, tok, time.perf_counter() - self._t0)
+        return n_valid
+
+    def _pack_prefill(self, budget: int) -> List:
+        """Mixed-step budget packing: place PREFILLING slots' chunks,
+        earliest arrival first, into the remaining budget (blocks allocated
+        per slot, LIFO eviction under pressure). Returns
+        ``(slot, chunk_tokens, start_pos)`` segments for
+        ``build_mixed_batch``.
+
+        Only FULL split-schedule chunks are packed — ``min(prefill_chunk,
+        remaining prompt)``, exactly the chunk the split scheduler would
+        run next, never a budget-truncated slice. Chunk boundaries decide
+        which prompt tokens attend each other at compute precision (same
+        chunk) vs pool precision (earlier chunk), so on lossy pools a
+        truncated chunk would make outputs — and the bytes published to
+        the prefix index — depend on packing timing; full-chunk packing
+        keeps every slot's chunk schedule identical to the split engine's
+        and the mixed-vs-split token parity structural. A chunk that
+        doesn't fit the leftover budget just waits for the next step
+        (the constructor floor ``token_budget >= max_slots +
+        prefill_chunk`` guarantees the earliest-arrival slot always
+        fits, so it can never be starved by later arrivals); a slot that
+        can't get blocks defers without blocking the rest of the pack."""
+        segs = []
+        pref = sorted((s for s, w in self._running.items() if w.prefilling),
+                      key=lambda s: (self._running[s].arrival, s))
+        for slot in pref:
+            if budget <= 0:
+                break
+            if slot not in self._running:   # evicted packing an earlier slot
+                continue
+            w = self._running[slot]
+            n = min(self.prefill_chunk, len(w.prompt) - w.pos)
+            if n > budget:      # never truncate: wait for the next step
+                continue
+            if n <= 0 or not self._alloc_for_chunk(slot, w, n):
+                continue
+            segs.append((slot, w.prompt[w.pos:w.pos + n], w.pos))
+            budget -= n
+        return segs
+
+    def _step_mixed(self) -> None:
+        """One unified engine step: pack prefill chunks + the decode batch
+        into a single flattened token-budget program dispatch, then sample
+        every slot that produced a token this step."""
+        self._grow_or_evict()
+        decoding = sorted(s for s, w in self._running.items()
+                          if not w.prefilling)
+        # decode tokens are reserved FIRST (never dropped for prefill work;
+        # token_budget >= n_slots guarantees they fit), prefill chunks pack
+        # into the remainder
+        segs = self._pack_prefill(self.token_budget - len(decoding))
+        # eviction during packing may have preempted decode slots
+        decoding = [s for s in decoding if s in self._running]
+        if not segs and not decoding:
+            return  # every prefilling slot deferred; decodes will free blocks
+        batch = build_mixed_batch(
+            segs, [(s, int(self._cur[s]), int(self._lengths[s]))
+                   for s in decoding],
+            self.token_budget, self.n_slots)
+
+        logits, self._state = self._mixed_fn(
+            self.params, jnp.asarray(batch.tokens), self._state,
+            jnp.asarray(batch.slot_ids), jnp.asarray(batch.positions),
+            jnp.asarray(batch.valid), jnp.asarray(batch.is_decode),
+            jnp.asarray(self._lengths), jnp.asarray(self._tables),
+            jnp.asarray(batch.sample_idx))
+        self.stats.record_step(batch.n_prefill, batch.n_decode,
+                               n_dispatches=1)
+
+        # one sample over all slots; non-sampling rows are garbage/discarded
+        temps = np.zeros((self.n_slots,), np.float32)
+        for slot, _, _ in segs:
+            temps[slot] = self._running[slot].req.temperature
+        for slot in decoding:
+            self._lengths[slot] += 1
+            temps[slot] = self._running[slot].req.temperature
+        self._key, sub = jax.random.split(self._key)
+        toks = np.asarray(self._sample(logits, jnp.asarray(temps), sub))
+        now = time.perf_counter() - self._t0
+
+        for slot, chunk, _ in segs:
+            w = self._running[slot]
+            self._advance_prefill(slot, w, len(chunk))
+            if w.pos >= len(w.prompt):
+                # final chunk: its sampled row is the request's first token
+                self._first_token(slot, w, int(toks[slot]), now)
+        for slot in decoding:
+            w = self._running[slot]
+            tok = int(toks[slot])
             w.tokens.append(tok)
             w.token_times.append(now)
+            self._cur[slot] = tok
             if w.done:
                 self._retire(slot, now)
-        return True
 
     def _admit(self, w: _Work, slot: int, ids: List[int]) -> None:
         _, prefill, insert, total, nb = self._prefill_for(len(w.prompt))
@@ -611,6 +809,8 @@ class Engine:
         last_index = jnp.int32(self._n_prefix + L - 1)
 
         logits, cache = prefill(self.params, batch, last_index)
+        # whole-prompt prefill + insert, processing the prompt off-step
+        self.stats.record_dispatch(2, prefill_tokens=L)
         self._key, sub = jax.random.split(self._key)
         temp = jnp.full((1,), w.req.temperature, jnp.float32)
         tok = int(np.asarray(self._sample(logits, temp, sub))[0])
@@ -622,16 +822,10 @@ class Engine:
         self._tables[slot, :] = 0
         self._tables[slot, :nb] = ids
         self._lengths[slot] = self._n_prefix + L
-        self._cur[slot] = tok
         if w.admitted_t is None:
             w.admitted_t = now
-        if w.first_token_t is None:
-            w.first_token_t = now  # TTFT endpoint: first sampled token
-        w.tokens.append(tok)
-        w.token_times.append(now)
         self._running[slot] = w
-        if w.done:
-            self._retire(slot, now)
+        self._first_token(slot, w, tok, now)
 
     def _grow_or_evict(self) -> None:
         """Give every DECODING slot a block covering its next write position,
@@ -700,12 +894,13 @@ class Engine:
         r.latency_s = r.timing.latency_s
         self.stats.record(r.timing)
 
-    def _decode_once(self) -> None:
+    def _decode_once(self) -> int:
         """One batched decode step over every DECODING slot. PREFILLING slots
         ride along shape-stably: their (garbage) write lands at
         ``lengths[slot]`` — the next chunk's first position, which the chunk
         program overwrites before any read, or the null block when that
-        block isn't allocated yet — and their sampled token is discarded."""
+        block isn't allocated yet — and their sampled token is discarded.
+        Returns the number of decode tokens sampled."""
         logits, self._state = self._decode(
             self.params, jnp.asarray(self._cur[:, None]), self._state,
             jnp.asarray(self._tables), jnp.asarray(self._lengths))
@@ -724,6 +919,7 @@ class Engine:
             self._cur[slot] = tok
             if w.done:
                 self._retire(slot, now)
+        return len(active)
 
     # ------------------------------------------------------------------ API
 
@@ -736,8 +932,17 @@ class Engine:
         join slots that earlier requests have already vacated or still hold.
         ``extra_inputs`` are full-batch arrays (one row per request) that are
         sliced per request at prefill (vision patches, encoder frames).
+
+        With ``persistent_cache=True`` the paged pools, allocator, and
+        prefix index carry over from the previous ``run()`` (scheduling
+        state and per-run stats still reset), so repeated system prompts
+        skip their prefill across calls.
         """
-        self._reset()
+        if self.persistent_cache and getattr(self, "_ran", False):
+            self._soft_reset()
+        else:
+            self._reset()
+        self._ran = True
         self.stats = ServeStats()
         self._key = jax.random.PRNGKey(seed)
         self._t0 = time.perf_counter()
@@ -763,15 +968,22 @@ class Engine:
                     time.sleep(min(max(self._waiting[0].arrival - now, 0.0),
                                    0.005))
                 continue
-            # one engine step = (at most) one prefill chunk, then a batched
-            # decode for every live DECODING slot — the mixed step that kills
-            # head-of-line blocking: decodes advance every step even while a
-            # long prompt is still streaming in
-            if self.prefill_chunk:
-                self._prefill_step()
+            if self.token_budget:
+                # unified step: packed prefill chunks + the decode batch in
+                # ONE program dispatch (DESIGN.md §Mixed step)
+                self._step_mixed()
+                continue
+            # split scheduler: (at most) one prefill chunk, then a batched
+            # decode for every live DECODING slot — kills head-of-line
+            # blocking like the mixed step, at two dispatches per step
+            n_pref = self._prefill_step() if self.prefill_chunk else 0
             self._grow_or_evict()
+            n_dec = 0
             if any(not w.prefilling for w in self._running.values()):
-                self._decode_once()
+                n_dec = self._decode_once()
+            self.stats.record_step(
+                n_pref, n_dec,
+                n_dispatches=(1 if n_pref else 0) + (1 if n_dec else 0))
         return requests
 
     def measure_ttft(self, prompt_len: int, *, iters: int = 8,

@@ -19,7 +19,8 @@ docs/serving.md walks through the lifecycle.
 from __future__ import annotations
 
 import collections
-from typing import Dict, List, Optional, Sequence
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +39,7 @@ __all__ = [
     "cache_bytes", "cache_specs", "layer_cache_len", "ring_positions",
     "BlockAllocator", "PrefixIndex", "NULL_BLOCK", "attn_layer_count",
     "init_paged_state", "paged_cache_bytes", "check_cache_spec",
+    "MixedBatch", "build_mixed_batch",
 ]
 
 NULL_BLOCK = 0  # reserved scratch block: never allocated, absorbs masked writes
@@ -353,6 +355,84 @@ class BlockAllocator:
 
 def attn_layer_count(cfg: ModelConfig) -> int:
     return sum(1 for spec in cfg.layers if spec.kind == "attn")
+
+
+# ------------------------------------------------- mixed-batch step geometry
+
+
+@dataclasses.dataclass
+class MixedBatch:
+    """The host-side flattened inputs of one mixed token-budget step
+    (``Model.mixed_step``): per-token slot/position/flag arrays plus the
+    per-slot sample gather indices. Built by ``build_mixed_batch`` from the
+    scheduler's packing plan; every array is fixed-shape in
+    ``(token_budget, n_slots)`` so the device program compiles once."""
+
+    tokens: np.ndarray      # (1, token_budget) int32, right-padded
+    slot_ids: np.ndarray    # (token_budget,) int32 owning slot (0 for pads)
+    positions: np.ndarray   # (token_budget,) int32 sequence positions
+    valid: np.ndarray       # (token_budget,) bool — False rows are pads
+    is_decode: np.ndarray   # (token_budget,) bool — decode vs prefill token
+    sample_idx: np.ndarray  # (n_slots,) int32 flat index each slot samples
+    n_prefill: int          # real prefill tokens packed
+    n_decode: int           # real decode tokens packed
+
+
+def build_mixed_batch(
+    prefill_segs: Sequence[Tuple[int, np.ndarray, int]],
+    decode_slots: Sequence[Tuple[int, int, int]],
+    token_budget: int,
+    n_slots: int,
+) -> MixedBatch:
+    """Flatten a step's packing plan into ``Model.mixed_step`` inputs.
+
+    ``prefill_segs``: per PREFILLING slot scheduled this step, a
+    ``(slot, chunk_tokens, start_pos)`` triple — the slot id, the prompt
+    slice to prefill (1-D int32), and the sequence position of its first
+    token. ``decode_slots``: per DECODING slot, ``(slot, cur_token,
+    position)`` — the token it feeds and the position it writes at.
+    Segments are laid out in order (prefill first, then decode tokens) and
+    right-padded to ``token_budget``; each slot's ``sample_idx`` points at
+    its decode token or the last token of its prefill segment.
+
+    Raises if the plan exceeds the budget or a slot appears twice — the
+    scheduler's budget/packing invariants, enforced at the geometry level.
+    """
+    total = sum(len(toks) for _, toks, _ in prefill_segs) + len(decode_slots)
+    if total > token_budget:
+        raise ValueError(
+            f"packed step ({total} tokens) exceeds token_budget "
+            f"({token_budget})")
+    seen = [s for s, _, _ in prefill_segs] + [s for s, _, _ in decode_slots]
+    if len(set(seen)) != len(seen):
+        raise ValueError(f"slot packed twice in one step: {sorted(seen)}")
+    tokens = np.zeros((1, token_budget), np.int32)
+    slot_ids = np.zeros((token_budget,), np.int32)
+    positions = np.zeros((token_budget,), np.int32)
+    valid = np.zeros((token_budget,), bool)
+    is_decode = np.zeros((token_budget,), bool)
+    sample_idx = np.zeros((n_slots,), np.int32)
+    o = 0
+    for slot, toks, start in prefill_segs:
+        n = len(toks)
+        tokens[0, o:o + n] = toks
+        slot_ids[o:o + n] = slot
+        positions[o:o + n] = np.arange(start, start + n, dtype=np.int32)
+        valid[o:o + n] = True
+        sample_idx[slot] = o + n - 1
+        o += n
+    for slot, cur, pos in decode_slots:
+        tokens[0, o] = cur
+        slot_ids[o] = slot
+        positions[o] = pos
+        valid[o] = True
+        is_decode[o] = True
+        sample_idx[slot] = o
+        o += 1
+    return MixedBatch(tokens=tokens, slot_ids=slot_ids, positions=positions,
+                      valid=valid, is_decode=is_decode, sample_idx=sample_idx,
+                      n_prefill=total - len(decode_slots),
+                      n_decode=len(decode_slots))
 
 
 def _wire_pool(n_blocks: int, block_size: int, kv_dim: int,

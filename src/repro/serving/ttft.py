@@ -180,9 +180,37 @@ class ServeStats:
 
     def __init__(self):
         self.timings: List[RequestTiming] = []
+        # per-step dispatch accounting (engine-maintained): how many engine
+        # steps ran, how many device programs they dispatched, and the
+        # (prefill, decode) token split each step packed — the attribution
+        # for the mixed-step dispatch-halving win
+        self.n_steps = 0
+        self.n_dispatches = 0
+        self.step_tokens: List[tuple] = []  # (n_prefill, n_decode) per step
+        # prompt tokens processed outside budgeted steps (whole-prompt
+        # prefill at admission)
+        self.off_step_prefill_tokens = 0
 
     def record(self, t: RequestTiming) -> None:
         self.timings.append(t)
+
+    def record_step(self, n_prefill: int, n_decode: int,
+                    n_dispatches: int = 1) -> None:
+        """One engine step: ``n_prefill`` prompt tokens + ``n_decode``
+        decode tokens processed through ``n_dispatches`` device programs
+        (1 for the unified mixed step; up to 2 — chunk + decode — for the
+        split scheduler)."""
+        self.n_steps += 1
+        self.n_dispatches += n_dispatches
+        self.step_tokens.append((n_prefill, n_decode))
+
+    def record_dispatch(self, n: int = 1, prefill_tokens: int = 0) -> None:
+        """Off-step program dispatches (whole-prompt prefill + insert at
+        admission, prefix-cache COW forks), with any prompt tokens they
+        processed so ``prefill_tokens`` stays truthful for whole-prompt
+        engines."""
+        self.n_dispatches += n
+        self.off_step_prefill_tokens += prefill_tokens
 
     def summary(self) -> Dict[str, float]:
         """Aggregate the run. Keys (seconds unless noted):
@@ -194,7 +222,14 @@ class ServeStats:
         - ``tpot_{p50,p95}_s`` over ``n_inter_token_samples`` — gaps
           between consecutive sampled tokens pooled across requests: the
           decode-side metric head-of-line blocking inflates (chunked
-          prefill bounds the stall to one chunk).
+          prefill bounds the stall to one chunk). Defined (0.0) even when
+          no request emits a second token — single-token traffic has no
+          gaps, and the summary must stay NaN-free.
+        - ``n_steps`` / ``n_dispatches`` / ``tokens_per_step_mean`` /
+          ``prefill_tokens`` / ``decode_tokens`` — per-step dispatch
+          accounting: engine steps, device programs dispatched, and the
+          packed token mix (the mixed token-budget step dispatches ONE
+          program per step where the split scheduler paid two).
         - ``n_preemptions`` — evict-and-recompute round trips.
         - ``prefill_tokens_skipped`` — prompt tokens served from shared
           prefix-cache blocks instead of recomputed; ``prefix_hit_rate``
@@ -215,6 +250,7 @@ class ServeStats:
         makespan = max(t.finished_s for t in ts) - min(t.arrival_s for t in ts)
         prompt_tokens = sum(t.n_prompt for t in ts)
         cached = sum(t.n_cached_prompt for t in ts)
+        step_total = sum(p + d for p, d in self.step_tokens)
         return {
             "n_requests": len(ts),
             "ttft_p50_s": _percentile(ttfts, 50),
@@ -222,9 +258,18 @@ class ServeStats:
             "ttft_mean_s": sum(ttfts) / len(ttfts),
             "latency_p50_s": _percentile(lats, 50),
             "latency_p90_s": _percentile(lats, 90),
-            "tpot_p50_s": _percentile(gaps, 50),
-            "tpot_p95_s": _percentile(gaps, 95),
+            # no-gap traffic (every request emits a single token) has no
+            # TPOT samples; report 0.0 rather than a NaN percentile
+            "tpot_p50_s": _percentile(gaps, 50) if gaps else 0.0,
+            "tpot_p95_s": _percentile(gaps, 95) if gaps else 0.0,
             "n_inter_token_samples": len(gaps),
+            "n_steps": self.n_steps,
+            "n_dispatches": self.n_dispatches,
+            "tokens_per_step_mean": (step_total / self.n_steps
+                                     if self.n_steps else 0.0),
+            "prefill_tokens": (sum(p for p, _ in self.step_tokens)
+                               + self.off_step_prefill_tokens),
+            "decode_tokens": sum(d for _, d in self.step_tokens),
             "n_generated": generated,
             "makespan_s": makespan,
             "tokens_per_s": generated / makespan if makespan > 0 else float("nan"),

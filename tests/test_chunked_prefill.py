@@ -228,18 +228,29 @@ def test_chunked_compiles_once_multidevice():
         model = Model(cfg)
         params = model.init_params(jax.random.PRNGKey(0))
         ctx = make_context(make_host_mesh(), None, policy=NO_COMPRESSION)
+        mk = lambda: [Request(prompt=np.arange(9 + 11 * i, dtype=np.int32),
+                              max_new_tokens=4, arrival_s=0.002 * i)
+                      for i in range(3)]
         for spec in (None, "fp4_e2m1"):
             # prefix_cache on: the arange prompts are prefixes of each other,
             # so later requests share the earlier ones' registered blocks —
-            # matching/COW must not add compiled variants under the mesh
+            # matching/COW must not add compiled variants under the mesh.
+            # The default engine runs the unified mixed-batch step; its
+            # outputs must match the split chunk+decode scheduler's under
+            # the mesh too, at exactly one compiled program.
             eng = Engine(model, params, ctx, max_slots=2, max_len=64,
                          cache_dtype=jnp.float32, cache_spec=spec,
                          prefill_chunk=8, prefix_cache=True)
-            eng.run([Request(prompt=np.arange(9 + 11 * i, dtype=np.int32),
-                             max_new_tokens=4, arrival_s=0.002 * i)
-                     for i in range(3)])
+            out = [r.output.copy() for r in eng.run(mk())]
             assert eng.prefill_cache_size() == 1, (spec, eng.prefill_cache_size())
             assert eng.decode_cache_size() == 1, (spec, eng.decode_cache_size())
+            split = Engine(model, params, ctx, max_slots=2, max_len=64,
+                           cache_dtype=jnp.float32, cache_spec=spec,
+                           prefill_chunk=8, prefix_cache=True,
+                           token_budget=0)
+            ref = [r.output.copy() for r in split.run(mk())]
+            for a, b in zip(out, ref):
+                np.testing.assert_array_equal(a, b)
     """)
     env = dict(os.environ, PYTHONPATH="src")
     proc = subprocess.run(

@@ -1,0 +1,249 @@
+"""Unified mixed-batch token-budget step (DESIGN.md §Mixed step): one
+program per engine step packing several slots' prefill chunks plus the
+decode batch. Pins the geometry helper's packing invariants, output parity
+with the split chunk+decode scheduler in both cache modes, the compile-once
+contract, budget/starvation/decode-conservation invariants, and the
+cross-run persistent prefix cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tp import TPContext
+from repro.models.model import Model
+from repro.serving import Engine, Request, build_mixed_batch
+from tests.conftest import fp32_reduced
+
+CTX = TPContext(mesh=None)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = fp32_reduced("internlm2-1.8b")
+    model = Model(cfg)
+    return cfg, model, model.init_params(jax.random.PRNGKey(0))
+
+
+def _mixed_traffic(cfg, n=5):
+    """Prompt lengths straddling several block boundaries, staggered so
+    prefill segments and decode tokens genuinely share steps."""
+    return [Request(prompt=(np.arange(5 + 9 * i, dtype=np.int32) * 11)
+                    % cfg.vocab_size,
+                    max_new_tokens=4 + i, arrival_s=0.002 * i)
+            for i in range(n)]
+
+
+# --------------------------------------------------------- geometry helper
+
+
+def test_build_mixed_batch_layout():
+    b = build_mixed_batch(
+        prefill_segs=[(2, np.array([7, 8, 9], np.int32), 16),
+                      (0, np.array([4], np.int32), 0)],
+        decode_slots=[(1, 42, 5)],
+        token_budget=8, n_slots=4)
+    np.testing.assert_array_equal(b.tokens[0], [7, 8, 9, 4, 42, 0, 0, 0])
+    np.testing.assert_array_equal(b.slot_ids, [2, 2, 2, 0, 1, 0, 0, 0])
+    np.testing.assert_array_equal(b.positions, [16, 17, 18, 0, 5, 0, 0, 0])
+    np.testing.assert_array_equal(b.valid,
+                                  [True] * 5 + [False] * 3)
+    np.testing.assert_array_equal(b.is_decode,
+                                  [False] * 4 + [True] + [False] * 3)
+    # slot 2 samples at its segment's last token, slot 0 at its single
+    # prefill token, slot 1 at its decode token; slot 3 defaults to 0
+    np.testing.assert_array_equal(b.sample_idx, [3, 4, 2, 0])
+    assert b.n_prefill == 4 and b.n_decode == 1
+
+
+def test_build_mixed_batch_rejects_overflow_and_double_pack():
+    with pytest.raises(ValueError, match="exceeds token_budget"):
+        build_mixed_batch([(0, np.zeros(5, np.int32), 0)],
+                          [(1, 1, 0)], token_budget=5, n_slots=2)
+    with pytest.raises(ValueError, match="packed twice"):
+        build_mixed_batch([(0, np.zeros(2, np.int32), 0)],
+                          [(0, 1, 2)], token_budget=8, n_slots=2)
+
+
+# ------------------------------------------------------------ engine parity
+
+
+def test_mixed_matches_split_outputs_dense(small_model):
+    """Collapsing a step to one program must not change what anyone
+    decodes: the mixed engine emits tokens identical to the split
+    chunk+decode engine on dense fp32 pools, and the unified program
+    compiles exactly once across mixed prompt lengths."""
+    cfg, model, params = small_model
+    split = Engine(model, params, CTX, max_slots=2, max_len=64,
+                   cache_dtype=jnp.float32, prefill_chunk=8, token_budget=0)
+    ref = [r.output.copy() for r in split.run(_mixed_traffic(cfg))]
+    mixed = Engine(model, params, CTX, max_slots=2, max_len=64,
+                   cache_dtype=jnp.float32, prefill_chunk=8)
+    assert mixed.token_budget == 8 + 2  # auto: chunk + one decode per slot
+    out = [r.output.copy() for r in mixed.run(_mixed_traffic(cfg))]
+    for a, b in zip(out, ref):
+        np.testing.assert_array_equal(a, b)
+    assert mixed.prefill_cache_size() == 1
+    assert mixed.decode_cache_size() == 1
+    assert mixed.allocator.n_free == mixed.n_blocks - 1
+
+
+def test_mixed_matches_split_outputs_wire_pools(small_model):
+    """On fp4_e2m1 wire pools the mixed program preserves the split path's
+    precision semantics token class by token class (prefill tokens see
+    same-chunk neighbours in compute precision; a decode token reads its
+    own write back through the codec round-trip), so outputs stay
+    token-identical to the split engine — not merely within codec
+    tolerance."""
+    cfg, model, params = small_model
+    split = Engine(model, params, CTX, max_slots=2, max_len=64,
+                   cache_dtype=jnp.float32, cache_spec="fp4_e2m1",
+                   prefill_chunk=8, token_budget=0)
+    ref = [r.output.copy() for r in split.run(_mixed_traffic(cfg))]
+    mixed = Engine(model, params, CTX, max_slots=2, max_len=64,
+                   cache_dtype=jnp.float32, cache_spec="fp4_e2m1",
+                   prefill_chunk=8)
+    out = [r.output.copy() for r in mixed.run(_mixed_traffic(cfg))]
+    for a, b in zip(out, ref):
+        np.testing.assert_array_equal(a, b)
+    assert mixed.prefill_cache_size() == 1
+    assert mixed.decode_cache_size() == 1
+
+
+def test_mixed_fewer_dispatches_than_split(small_model):
+    """The point of the refactor: one program dispatch per step instead of
+    two, at identical outputs (asserted above on the same traffic)."""
+    cfg, model, params = small_model
+    split = Engine(model, params, CTX, max_slots=2, max_len=64,
+                   cache_dtype=jnp.float32, prefill_chunk=8, token_budget=0)
+    split.run(_mixed_traffic(cfg))
+    mixed = Engine(model, params, CTX, max_slots=2, max_len=64,
+                   cache_dtype=jnp.float32, prefill_chunk=8)
+    mixed.run(_mixed_traffic(cfg))
+    s, m = split.stats.summary(), mixed.stats.summary()
+    assert m["n_dispatches"] < s["n_dispatches"]
+    assert m["n_steps"] == m["n_dispatches"]  # exactly one program per step
+    assert m["tokens_per_step_mean"] > 0
+
+
+# ------------------------------------------------- budget packing invariants
+
+
+def test_budget_packing_invariants(small_model):
+    """Every step packs at most token_budget tokens; several PREFILLING
+    slots' chunks genuinely share steps; chunks are never budget-truncated
+    (only full split-schedule chunks pack — truncation would shift chunk
+    boundaries and break mixed-vs-split parity on lossy pools); no prompt
+    or decode token is ever lost to packing (decode tokens are reserved
+    before prefill work)."""
+    cfg, model, params = small_model
+    budget = 20
+    mk = lambda: [Request(prompt=(np.arange(40, dtype=np.int32) * (i + 3))
+                          % cfg.vocab_size, max_new_tokens=6)
+                  for i in range(4)]
+    eng = Engine(model, params, CTX, max_slots=4, max_len=64,
+                 cache_dtype=jnp.float32, prefill_chunk=8,
+                 token_budget=budget)
+    out = [r.output.copy() for r in eng.run(mk())]
+    steps = eng.stats.step_tokens
+    assert steps and all(p + d <= budget for p, d in steps)
+    # simultaneous arrivals: more than one slot's chunk packs into one step
+    assert any(p > eng.prefill_chunk for p, _ in steps)
+    # no truncation: 40-token prompts split into full 8-token chunks only,
+    # so every step's packed prefill is a whole number of chunks (the old
+    # truncating packer would emit e.g. 8+8+4 into the 20-token budget)
+    assert all(p % eng.prefill_chunk == 0 for p, _ in steps)
+    s = eng.stats.summary()
+    # conservation (preemption-free pool): every prompt token prefilled
+    # exactly once, every post-first output token decoded exactly once
+    assert s["n_preemptions"] == 0
+    assert s["prefill_tokens"] == 4 * 40
+    assert s["decode_tokens"] == sum(len(o) - 1 for o in out)
+
+
+def test_earliest_prefilling_slot_never_starved(small_model):
+    """The earliest-arrival prefilling slot is packed first every step, so
+    a stream of later arrivals can't starve it: with prompts longer than
+    the per-step budget, first arrival reaches its first token first."""
+    cfg, model, params = small_model
+    reqs = [Request(prompt=(np.arange(48, dtype=np.int32) * (i + 5))
+                    % cfg.vocab_size, max_new_tokens=3, arrival_s=0.002 * i)
+            for i in range(3)]
+    eng = Engine(model, params, CTX, max_slots=3, max_len=64,
+                 cache_dtype=jnp.float32, prefill_chunk=8, token_budget=11)
+    eng.run(reqs)
+    firsts = [r.timing.first_token_s for r in reqs]
+    assert firsts[0] == min(firsts)
+
+
+def test_token_budget_validation(small_model):
+    cfg, model, params = small_model
+    with pytest.raises(ValueError, match="cover one decode token"):
+        Engine(model, params, CTX, max_slots=4, max_len=64,
+               prefill_chunk=8, token_budget=3)
+    with pytest.raises(ValueError, match="rides on chunked prefill"):
+        Engine(model, params, CTX, max_slots=2, max_len=64,
+               prefill_chunk=0, token_budget=16)
+    hybrid = Model(fp32_reduced("jamba-v0.1-52b"))
+    hp = hybrid.init_params(jax.random.PRNGKey(0))
+    heng = Engine(hybrid, hp, CTX, max_slots=2, max_len=48)
+    assert heng.token_budget == 0  # recurrent layers -> split whole-prompt
+
+
+# -------------------------------------------------- persistent prefix cache
+
+
+def test_persistent_cache_skips_prefill_across_runs(small_model):
+    """Engine(persistent_cache=True) keeps pools + allocator + prefix index
+    warm between run() calls: a second run of the same system prompt skips
+    its prefill tokens and still decodes identical outputs."""
+    cfg, model, params = small_model
+    sys_prompt = (np.arange(32, dtype=np.int32) * 13) % cfg.vocab_size
+    mk = lambda: [Request(prompt=np.concatenate(
+                      [sys_prompt, np.arange(8, dtype=np.int32) + i]),
+                      max_new_tokens=5, arrival_s=0.05 * i)
+                  for i in range(3)]
+    eng = Engine(model, params, CTX, max_slots=2, max_len=64,
+                 cache_dtype=jnp.float32, prefill_chunk=8,
+                 prefix_cache=True, persistent_cache=True)
+    out1 = [r.output.copy() for r in eng.run(mk())]
+    skipped1 = eng.stats.summary()["prefill_tokens_skipped"]
+    out2 = [r.output.copy() for r in eng.run(mk())]
+    skipped2 = eng.stats.summary()["prefill_tokens_skipped"]
+    # run 2 starts with the whole shared prefix resident: every request
+    # (including the first) skips it, unlike run 1's cold first request
+    assert skipped2 > skipped1
+    assert skipped2 >= len(mk()) * (32 // eng.block_size) * eng.block_size
+    for a, b in zip(out1, out2):
+        np.testing.assert_array_equal(a, b)
+    cold = Engine(model, params, CTX, max_slots=2, max_len=64,
+                  cache_dtype=jnp.float32, prefill_chunk=8)
+    ref = [r.output.copy() for r in cold.run(mk())]
+    for a, b in zip(out2, ref):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_persistent_cache_requires_prefix_cache(small_model):
+    cfg, model, params = small_model
+    with pytest.raises(ValueError, match="requires prefix_cache"):
+        Engine(model, params, CTX, max_slots=2, max_len=64,
+               prefill_chunk=8, persistent_cache=True)
+
+
+# ----------------------------------------------------------- stats guards
+
+
+def test_summary_nan_free_without_inter_token_gaps(small_model):
+    """Regression (satellite): traffic where no request emits a second
+    token has zero TPOT samples; the summary must stay NaN-free with
+    well-defined tpot_* fields."""
+    cfg, model, params = small_model
+    eng = Engine(model, params, CTX, max_slots=2, max_len=64,
+                 cache_dtype=jnp.float32, prefill_chunk=8)
+    eng.run([Request(prompt=np.arange(6 + i, dtype=np.int32),
+                     max_new_tokens=1) for i in range(2)])
+    s = eng.stats.summary()
+    assert s["n_inter_token_samples"] == 0
+    assert s["tpot_p50_s"] == 0.0 and s["tpot_p95_s"] == 0.0
+    for k, v in s.items():
+        if isinstance(v, float):
+            assert np.isfinite(v), (k, v)
