@@ -4,7 +4,6 @@ experiments/dryrun/*.json records. Writes experiments/roofline_table.md
 (included verbatim into EXPERIMENTS.md)."""
 import json
 import pathlib
-from collections import defaultdict
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 DRY = ROOT / "experiments" / "dryrun"

@@ -8,7 +8,7 @@ kinds plus global dims. Every config file in this package cites its source.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 __all__ = ["LayerSpec", "ModelConfig", "InputShape", "INPUT_SHAPES", "reduced_config"]
 

@@ -8,7 +8,6 @@ Two fastest non-learned compressors the paper compares against:
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax.numpy as jnp
 

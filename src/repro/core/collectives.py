@@ -28,15 +28,25 @@ __all__ = [
     "compressed_all_gather",
     "compressed_all_to_all",
     "psum_maybe_compressed",
+    "reset_downgrade_warnings",
 ]
 
 
 _DOWNGRADE_WARNED: set = set()
 
 
-def _variant_downgrade(reason: str, strict: bool) -> None:
+def reset_downgrade_warnings() -> None:
+    """Forget which two_phase downgrades have already warned (tests, or a
+    fresh serving process reusing a long-lived interpreter)."""
+    _DOWNGRADE_WARNED.clear()
+
+
+def _variant_downgrade(reason: str, strict: bool, key: tuple = ()) -> None:
     """A requested two_phase reduction cannot run; raise under ``strict`` or
-    warn once per distinct reason (trace-time Python, so this is cheap)."""
+    warn once per distinct (reason, spec, shape, axis) site — NOT once per
+    process: a second engine with a different policy or feature dim gets its
+    own warning rather than having its downgrade masked by an earlier
+    engine's (trace-time Python, so the set lookup is cheap)."""
     msg = (
         f"compressed_psum: variant='two_phase' requested but {reason}; "
         "falling back to the gather variant. Plumb axis_size (the TP degree) "
@@ -45,8 +55,9 @@ def _variant_downgrade(reason: str, strict: bool) -> None:
     )
     if strict:
         raise ValueError(msg)
-    if reason not in _DOWNGRADE_WARNED:
-        _DOWNGRADE_WARNED.add(reason)
+    dedup = (reason,) + key
+    if dedup not in _DOWNGRADE_WARNED:
+        _DOWNGRADE_WARNED.add(dedup)
         warnings.warn(msg, RuntimeWarning, stacklevel=3)
 
 
@@ -153,15 +164,18 @@ def compressed_psum(
         and partial.shape[-1] % (axis_size * spec.block_size) == 0
     )
     if variant == "two_phase" and not use_two_phase:
+        # dedup key carries the site identity (policy spec, wire shape, TP
+        # degree): one engine's downgrade can never mask another's
+        key = (spec.name, partial.shape[-1], axis_size)
         if axis_size <= 1:
             _variant_downgrade(
                 f"axis_size={axis_size} is not plumbed (need the TP degree)",
-                strict)
+                strict, key)
         else:
             _variant_downgrade(
                 f"feature dim {partial.shape[-1]} is not divisible by "
                 f"axis_size * block_size = {axis_size * spec.block_size}",
-                strict)
+                strict, key)
 
     @jax.custom_vjp
     def _psum(p):

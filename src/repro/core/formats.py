@@ -225,7 +225,7 @@ class KVCacheSpec:
         return self.mx is not None
 
     @classmethod
-    def parse(cls, spec) -> "KVCacheSpec":
+    def parse(cls, spec: KVCacheSpec | MXSpec | str | None) -> KVCacheSpec:
         """Accept a KVCacheSpec, an MXSpec, None, or a CLI string: ``bf16`` /
         ``none`` / ``dense`` => dense; an element-format name (``fp4_e2m1``)
         => that format at block 32 / e8m0; a full ``<elem>_b<block>_<scale>``

@@ -21,7 +21,6 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.formats import MXSpec
 from repro.core.packing import pack_codes, unpack_codes

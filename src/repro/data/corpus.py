@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import pathlib
 import sys
-from typing import Iterator, List
+from typing import List
 
 import numpy as np
 

@@ -22,7 +22,6 @@ import traceback
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.analysis.roofline import analyze_compiled
 from repro.compat import set_mesh

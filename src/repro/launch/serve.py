@@ -31,7 +31,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced_config
@@ -80,6 +79,11 @@ def main():
                          "bit-identical to the engine without the cache")
     ap.add_argument("--stagger", type=float, default=0.0,
                     help="inter-arrival gap in seconds (simulated traffic)")
+    ap.add_argument("--audit", action="store_true",
+                    help="statically audit the engine's compiled programs "
+                         "before serving (repro.staticcheck: compressed-wire "
+                         "contract, dtype drift, host transfers; DESIGN.md "
+                         "§Static analysis) and fail fast on any violation")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -109,6 +113,18 @@ def main():
     print(f"kv cache: {engine.cache_spec.describe()} "
           f"({engine.kv_pool_bytes() / 1e6:.2f} MB pools); step: {step}"
           f"; prefix cache: {'on' if engine.prefix_cache else 'off'}")
+
+    if args.audit:
+        # static program audit BEFORE any request is served: trace (never
+        # execute) every compiled program and check the communication
+        # contract the run is about to claim numbers for
+        from repro.staticcheck import audit_engine
+
+        report = audit_engine(engine, label=f"{args.arch} serve",
+                              prompt_len=args.prompt_len)
+        print(report.format_table())
+        if not report.ok:
+            raise SystemExit("static audit FAILED — not serving")
 
     n_req = args.requests or args.slots
     rng = np.random.default_rng(0)

@@ -11,10 +11,9 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import INPUT_SHAPES, get_config, reduced_config
+from repro.configs import get_config, reduced_config
 from repro.core.formats import MXSpec
 from repro.core.policy import CompressionPolicy, NO_COMPRESSION
 from repro.data import Batches, corpus_tokens

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.tp import TPContext, column_linear, constrain, fused_mlp, row_linear
+from repro.core.tp import TPContext, column_linear, fused_mlp, row_linear
 from repro.models.common import Initializer, init_linear
 
 __all__ = ["init_mlp", "mlp", "mlp_specs"]

@@ -6,14 +6,14 @@ extra "cross" list (encoder K/V) for encoder-decoder models.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig
-from repro.core.tp import TPContext, constrain, row_linear
+from repro.core.tp import TPContext, constrain
 from repro.models.attention import (
     KVCache, attention, attention_specs, init_attention,
     paged_attention_chunk, paged_attention_decode, paged_attention_mixed,

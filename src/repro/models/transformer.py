@@ -4,24 +4,22 @@ Covers dense, MoE, SSM, hybrid, and the decoder halves of VLM / enc-dec.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax.numpy as jnp
 
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.core.tp import TPContext
 from repro.models.attention import (
-    KVCache, attention, attention_specs, init_attention, init_cache,
+    attention, attention_specs, init_attention, init_cache,
 )
 from repro.models.common import Initializer, init_norm, rms_norm
 from repro.models.mlp import init_mlp, mlp, mlp_specs
 from repro.models.moe import init_moe, moe, moe_specs
-from repro.models.ssm import (
-    MambaCache, init_mamba, init_mamba_cache, mamba, mamba_specs,
-)
+from repro.models.ssm import init_mamba, init_mamba_cache, mamba, mamba_specs
 from repro.models.xlstm import (
-    MLSTMCache, SLSTMCache, init_mlstm, init_mlstm_cache, init_slstm,
-    init_slstm_cache, mlstm, mlstm_specs, slstm, slstm_specs,
+    init_mlstm, init_mlstm_cache, init_slstm, init_slstm_cache, mlstm,
+    mlstm_specs, slstm, slstm_specs,
 )
 
 __all__ = [

@@ -42,12 +42,13 @@ import collections
 import dataclasses
 import math
 import time
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.formats import KVCacheSpec, MXSpec
 from repro.core.mx import MXCompressed
 from repro.core.policy import NO_COMPRESSION
 from repro.core.tp import TPContext, constrain
@@ -161,7 +162,8 @@ class Engine:
                  max_len: int, batch_size: Optional[int] = None,
                  max_slots: Optional[int] = None, block_size: int = 16,
                  n_blocks: Optional[int] = None, cache_dtype=jnp.bfloat16,
-                 cache_spec=None, compress_decode: bool = False,
+                 cache_spec: KVCacheSpec | MXSpec | str | None = None,
+                 compress_decode: bool = False,
                  prefill_chunk: Optional[int] = None,
                  token_budget: Optional[int] = None,
                  prefix_cache: bool = False,
@@ -439,7 +441,12 @@ class Engine:
         return (bucket,) + self._prefill_fns[bucket]
 
     def _make_insert(self, nb: int, total: int):
-        """Jitted prefill-insert: scatter a single-request dense prefill cache
+        return jax.jit(self._insert_impl(nb, total),
+                       donate_argnums=self._insert_donate)
+
+    def _insert_impl(self, nb: int, total: int):
+        """Prefill-insert body (jitted by ``_make_insert``; traced bare by
+        ``trace_programs``): scatter a single-request dense prefill cache
         into the slot's allocated blocks / batched recurrent state rows.
         Quantized pools get the same scatter in wire format: the dense prefill
         K/V is MX-quantized per position before the block write."""
@@ -485,7 +492,7 @@ class Engine:
                 new["cross_k"], new["cross_v"] = ck, cv
             return new
 
-        return jax.jit(insert, donate_argnums=self._insert_donate)
+        return insert
 
     def _cow_impl(self, state, src, dst):
         """Copy block ``src``'s content to block ``dst`` in every attention
@@ -1013,3 +1020,122 @@ class Engine:
         times = np.array(times)
         return {"median_s": float(np.median(times)),
                 "std_s": float(np.std(times)), "iters": len(times)}
+
+    # ------------------------------------------------------- static analysis
+
+    def _wire_tokens(self, batch: int, seq: int, ctx: TPContext) -> int:
+        """Tokens crossing the wire per TP collective in a program whose
+        activations are (batch, seq, d) — mirrors ``row_linear``'s
+        ``n_tokens`` math (batch divides over the data axes when it can),
+        so the auditor gates compression exactly where the model code does."""
+        n = batch * seq
+        if ctx.mesh is not None and ctx.data_axes and batch % ctx.dp_size == 0:
+            n //= max(1, ctx.dp_size)
+        return n
+
+    def trace_programs(self, *, prompt_len: Optional[int] = None):
+        """ClosedJaxprs of every compiled engine program, traced with
+        ShapeDtypeStruct stand-ins — nothing executes on device.
+
+        Returns ``{name: ProgramTrace}`` covering the programs this engine
+        configuration actually dispatches: ``decode`` always; ``chunk``
+        (split scheduler) or ``mixed`` (token-budget scheduler) per mode;
+        ``cow`` when the prefix cache is on; and the whole-prompt
+        ``prefill``/``insert`` pair for whole-prompt engines (or any engine
+        when ``prompt_len`` is passed — chunked engines only reach that pair
+        via ``measure_ttft``). This is the input surface of
+        ``repro.staticcheck.jaxpr_audit``; the traces carry the policy,
+        per-step wire-token count, and boundary avals each audit rule needs.
+        """
+        from repro.staticcheck.report import ProgramTrace
+
+        sds = jax.ShapeDtypeStruct
+        i32, b8 = jnp.int32, jnp.bool_
+        aval = lambda x: sds(x.shape, x.dtype)
+        state_in = jax.tree.map(aval, self._state)
+        axis_sizes = dict(self.ctx.mesh.shape) if self.ctx.mesh else {}
+        traces = {}
+
+        def trace(name, fn, args, *, ctx, n_tokens, is_step,
+                  outs="logits+state"):
+            jaxpr, out = jax.make_jaxpr(fn, return_shape=True)(*args)
+            logits = state_out = None
+            if outs == "logits+state":
+                logits, state_out = out
+            elif outs == "logits":
+                logits = out[0] if isinstance(out, tuple) else out
+            elif outs == "state":
+                state_out = out
+            traces[name] = ProgramTrace(
+                name=name, jaxpr=jaxpr, policy=ctx.policy, n_tokens=n_tokens,
+                compute_dtype=str(jnp.dtype(self.cfg.dtype)), is_step=is_step,
+                axis_sizes=axis_sizes, tp_axis=self.ctx.axis,
+                logits_out=logits,
+                state_in=state_in if state_out is not None else None,
+                state_out=state_out,
+                retrace=lambda: jax.make_jaxpr(fn)(*args))
+
+        model, cache_spec = self.model, self.cache_spec
+        tables = sds((self.n_slots, self.max_blocks), i32)
+        lengths = sds((self.n_slots,), i32)
+
+        trace("decode",
+              lambda p, t, s, tb, ln: model.decode_step_paged(
+                  self.ctx_decode, p, t, s, tb, ln, cache_spec=cache_spec),
+              (self.params, sds((self.n_slots, 1), i32), state_in, tables,
+               lengths),
+              ctx=self.ctx_decode, is_step=True,
+              n_tokens=self._wire_tokens(self.n_slots, 1, self.ctx_decode))
+
+        if self._chunk_fn is not None:
+            trace("chunk",
+                  lambda p, t, s, row, st, nv: model.prefill_chunk(
+                      self.ctx, p, t, s, row, st, nv, cache_spec=cache_spec),
+                  (self.params, sds((1, self.prefill_chunk), i32), state_in,
+                   sds((self.max_blocks,), i32), sds((), i32), sds((), i32)),
+                  ctx=self.ctx, is_step=True,
+                  n_tokens=self._wire_tokens(1, self.prefill_chunk, self.ctx))
+
+        if self._mixed_fn is not None:
+            T = self.token_budget
+            trace("mixed",
+                  lambda p, t, s, sid, pos, va, dec, st, tb, si:
+                      model.mixed_step(self.ctx, p, t, s, sid, pos, va, dec,
+                                       st, tb, si, cache_spec=cache_spec),
+                  (self.params, sds((1, T), i32), state_in, sds((T,), i32),
+                   sds((T,), i32), sds((T,), b8), sds((T,), b8), lengths,
+                   tables, sds((self.n_slots,), i32)),
+                  ctx=self.ctx, is_step=True,
+                  n_tokens=self._wire_tokens(1, T, self.ctx))
+
+        if self._cow_fn is not None:
+            trace("cow", self._cow_impl,
+                  (state_in, sds((), i32), sds((), i32)),
+                  ctx=self.ctx, is_step=False, n_tokens=0, outs="state")
+
+        if prompt_len is None and not self.prefill_chunk:
+            prompt_len = self.block_size
+        if prompt_len is not None:
+            from repro.configs.base import InputShape
+
+            bucket, total, nb = self._shapes_for(prompt_len)
+            batch = self.model.input_specs(
+                InputShape(name="audit", seq_len=total, global_batch=1,
+                           kind="prefill"),
+                dtype=jnp.dtype(self.cfg.dtype))
+            cache0 = jax.eval_shape(
+                lambda: model.init_cache(1, total, self.cache_dtype))
+
+            def prefill(p, b, last):
+                cache = model.init_cache(1, total, self.cache_dtype)
+                return model.prefill(self.ctx, p, b, cache, last_index=last)
+
+            trace("prefill", prefill,
+                  (self.params, batch, sds((), i32)),
+                  ctx=self.ctx, is_step=False, outs="logits",
+                  n_tokens=self._wire_tokens(1, bucket, self.ctx))
+            trace("insert", self._insert_impl(nb, total),
+                  (state_in, cache0["layers"], cache0.get("cross"),
+                   sds((), i32), sds((nb,), i32)),
+                  ctx=self.ctx, is_step=False, n_tokens=0, outs="state")
+        return traces

@@ -22,13 +22,12 @@ import collections
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import LayerSpec, ModelConfig
-from repro.core.formats import KVCacheSpec
+from repro.core.formats import KVCacheSpec, MXSpec
 from repro.core.mx import MXCompressed, wire_arrays_shape
 from repro.core.tp import TPContext
 from repro.models.attention import KVCache
@@ -447,7 +446,9 @@ def _wire_pool(n_blocks: int, block_size: int, kv_dim: int,
                         scales=jnp.zeros(s_shape, jnp.uint8))
 
 
-def check_cache_spec(cfg: ModelConfig, cache_spec: KVCacheSpec) -> KVCacheSpec:
+def check_cache_spec(
+    cfg: ModelConfig, cache_spec: KVCacheSpec | MXSpec | str | None,
+) -> KVCacheSpec:
     """Validate a (possibly stringy) cache spec against the model geometry."""
     cache_spec = KVCacheSpec.parse(cache_spec)
     if cache_spec.quantized and cfg.kv_dim % cache_spec.mx.block_size != 0:

@@ -1,0 +1,36 @@
+"""Static program analysis: machine-checked invariants for the serving path.
+
+Two passes (DESIGN.md §Static analysis):
+
+* ``jaxpr_audit`` — walks the ClosedJaxprs of every compiled engine program
+  (via ``Engine.trace_programs()``, tracing only — nothing executes) and
+  checks the communication contract the paper's results rest on: collectives
+  over the TP mesh axis carry MX wire bytes (uint8 payload+scale pairs whose
+  shapes match ``wire_arrays_shape``) whenever the active
+  ``CompressionPolicy`` says that boundary is compressed, program boundary
+  dtypes don't drift, no host callbacks hide in step programs, and retracing
+  is deterministic (the compile-once cache key is value-independent).
+
+* ``lint`` — a stdlib-``ast`` pass with repo-specific rules: no device ops
+  in host-side scheduler code, no mutable default arguments, allocator state
+  encapsulation, statically-resolvable (and hashable) ``jax.jit`` static
+  args, no sync calls outside timing code, no dead imports.
+
+``scripts/static_audit.py`` drives both over the dense+fp4 × split+mixed
+engine matrix; ``launch/serve.py --audit`` runs the jaxpr audit on the
+engine actually being served.
+"""
+from repro.staticcheck.jaxpr_audit import (
+    audit_engine, audit_program, collect_collectives, iter_eqns,
+)
+from repro.staticcheck.lint import LintViolation, lint_paths, lint_source
+from repro.staticcheck.report import (
+    AuditReport, CollectiveRecord, Finding, ProgramReport, ProgramTrace,
+)
+
+__all__ = [
+    "audit_engine", "audit_program", "collect_collectives", "iter_eqns",
+    "lint_paths", "lint_source", "LintViolation",
+    "AuditReport", "CollectiveRecord", "Finding", "ProgramReport",
+    "ProgramTrace",
+]

@@ -1,0 +1,356 @@
+"""Repo-specific AST lint rules (stdlib ``ast`` only — no new deps).
+
+Rules (ids are stable; DESIGN.md §Static analysis):
+
+- ``SC001`` mutable default argument (list/dict/set literals or
+  constructors) — shared across calls, the classic aliasing bug.
+- ``SC002`` device op (``jnp``/``lax``/``jax.*``) inside host-side
+  scheduler code. The engine's packing/admission/eviction methods and the
+  ``kv_cache`` host structures (``BlockAllocator``, ``PrefixIndex``,
+  ``build_mixed_batch``) are on the per-step host path; a stray device op
+  there is a silent dispatch (or sync) per engine step.
+- ``SC003`` allocator state (``_free`` / ``_free_set`` / ``_ref``) touched
+  outside ``BlockAllocator`` methods — refcount/free-list invariants hold
+  only if every mutation goes through the class API.
+- ``SC004`` ``jax.jit`` static-arg audit: ``static_argnames`` entries must
+  be literals, must name parameters of the jitted function, and every
+  module-local call site must pass a hashable value for them (an unhashable
+  static arg raises at call time; a wrong name retraces per call).
+- ``SC005`` ``block_until_ready`` / sync calls outside timing code
+  (``measure_*`` functions, ``scripts/``, ``benchmarks/``, ``tests/``) —
+  a sync on the serving path serializes the dispatch pipeline.
+- ``SC006`` dead module-level import (honours ``__all__`` re-exports).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["LintViolation", "lint_source", "lint_paths", "ALL_RULES"]
+
+ALL_RULES = ("SC001", "SC002", "SC003", "SC004", "SC005", "SC006")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+
+# host-only zones for SC002: path suffix -> qualnames (class, class.method,
+# or function) that run on the per-step host scheduling path
+HOST_ZONES: Dict[str, Tuple[str, ...]] = {
+    "serving/kv_cache.py": (
+        "BlockAllocator", "PrefixIndex", "MixedBatch", "build_mixed_batch",
+    ),
+    "serving/engine.py": (
+        "Engine._free_slot", "Engine._admit_ready", "Engine._admit_chunked",
+        "Engine._alloc_for_chunk", "Engine._advance_prefill",
+        "Engine._first_token", "Engine._pack_prefill", "Engine._grow_or_evict",
+        "Engine._preempt", "Engine._clear_slot", "Engine._retire",
+        "Engine._soft_reset",
+    ),
+}
+
+_ALLOCATOR_PRIVATE = {"_free", "_free_set", "_ref"}
+_DEVICE_ROOTS = {"jnp", "lax"}
+_SYNC_OK_PATHS = ("scripts/", "benchmarks/", "tests/", "examples/")
+_MUTABLE_CTORS = {"list", "dict", "set", "defaultdict", "deque"}
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _zone_qualnames(path: str) -> Tuple[str, ...]:
+    p = pathlib.PurePath(path).as_posix()
+    for suffix, quals in HOST_ZONES.items():
+        if p.endswith(suffix):
+            return quals
+    return ()
+
+
+class _Scoped(ast.NodeVisitor):
+    """Base visitor tracking the (class/function) qualname stack."""
+
+    def __init__(self) -> None:
+        self.stack: List[str] = []
+
+    def _walk_scope(self, node: ast.AST) -> None:
+        self.stack.append(node.name)  # type: ignore[attr-defined]
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_ClassDef = _walk_scope
+    visit_FunctionDef = _walk_scope
+    visit_AsyncFunctionDef = _walk_scope
+
+    @property
+    def qualname(self) -> str:
+        return ".".join(self.stack)
+
+    def in_zone(self, quals: Tuple[str, ...]) -> bool:
+        q = self.qualname
+        return any(q == z or q.startswith(z + ".") for z in quals)
+
+
+class _Pass(_Scoped):
+    def __init__(self, path: str, rules: Sequence[str]) -> None:
+        super().__init__()
+        self.path = path
+        self.rules = set(rules)
+        self.out: List[LintViolation] = []
+        self.zone = _zone_qualnames(path) if "SC002" in self.rules else ()
+        posix = pathlib.PurePath(path).as_posix()
+        self.sync_ok_file = any(f"/{frag}" in f"/{posix}"
+                                for frag in _SYNC_OK_PATHS)
+
+    def emit(self, rule: str, node: ast.AST, msg: str) -> None:
+        if rule in self.rules:
+            self.out.append(LintViolation(rule, self.path,
+                                          getattr(node, "lineno", 0), msg))
+
+    # SC001 ------------------------------------------------------------
+    def _check_defaults(self, node) -> None:
+        args = node.args
+        for d in list(args.defaults) + [d for d in args.kw_defaults if d]:
+            bad = isinstance(d, (ast.List, ast.Dict, ast.Set))
+            if isinstance(d, ast.Call):
+                bad = bad or _dotted(d.func) in _MUTABLE_CTORS
+            if bad:
+                self.emit("SC001", d,
+                          f"mutable default argument in '{node.name}' — "
+                          f"default values are shared across calls; use "
+                          f"None + construct inside")
+
+    def visit_FunctionDef(self, node) -> None:
+        self._check_defaults(node)
+        self._walk_scope(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        # lambdas can't be named in the message but share the bug
+        for d in list(node.args.defaults) + [d for d in node.args.kw_defaults
+                                             if d]:
+            if isinstance(d, (ast.List, ast.Dict, ast.Set)):
+                self.emit("SC001", d, "mutable default argument in lambda")
+        self.generic_visit(node)
+
+    # SC002 / SC003 / SC005 --------------------------------------------
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if node.attr in _ALLOCATOR_PRIVATE and "SC003" in self.rules:
+            recv_self = (isinstance(node.value, ast.Name)
+                         and node.value.id == "self")
+            inside = self.stack and self.stack[0] == "BlockAllocator"
+            if not (recv_self and inside):
+                recv = _dotted(node.value) or "<expr>"
+                self.emit("SC003", node,
+                          f"allocator private state '{recv}.{node.attr}' "
+                          f"touched outside BlockAllocator — mutate free "
+                          f"list/refcounts only through its methods")
+        if node.attr == "block_until_ready" and not self.sync_ok_file:
+            fn = next((s for s in reversed(self.stack) if s[:1].islower()
+                       or "_" in s), "")
+            if not any(s.startswith("measure_") for s in self.stack):
+                self.emit("SC005", node,
+                          f"block_until_ready outside timing code "
+                          f"(in '{self.qualname or fn}') — a sync here "
+                          f"stalls the dispatch pipeline")
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if self.zone and self.in_zone(self.zone) and isinstance(node.ctx,
+                                                                ast.Load):
+            if node.id in _DEVICE_ROOTS or node.id == "jax":
+                self.emit("SC002", node,
+                          f"device op root '{node.id}' in host-side "
+                          f"scheduler code ('{self.qualname}') — host "
+                          f"packing/admission must stay numpy-only")
+        self.generic_visit(node)
+
+
+# ------------------------------------------------------------ SC004 + SC006
+
+
+def _jit_static_argnames(call: ast.Call) -> Optional[List[Tuple[str, ast.AST]]]:
+    """If ``call`` is ``jax.jit(...)`` or ``functools.partial(jax.jit, ...)``,
+    return its static_argnames entries as (name, value-node) pairs — name is
+    None for non-literal entries. Returns None when not a jit call."""
+    f = _dotted(call.func)
+    inner = None
+    if f in ("jax.jit", "jit"):
+        inner = call
+    elif f in ("functools.partial", "partial") and call.args:
+        if _dotted(call.args[0]) in ("jax.jit", "jit"):
+            inner = call
+    if inner is None:
+        return None
+    for kw in inner.keywords:
+        if kw.arg != "static_argnames":
+            continue
+        v = kw.value
+        elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+        out = []
+        for e in elts:
+            name = e.value if (isinstance(e, ast.Constant)
+                               and isinstance(e.value, str)) else None
+            out.append((name, e))
+        return out
+    return []
+
+
+_UNHASHABLE_NODES = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+                     ast.SetComp, ast.GeneratorExp)
+
+
+def _check_static_args(tree: ast.Module, p: _Pass) -> None:
+    """SC004: derive each jit site's static-arg signature and validate it
+    module-locally (decorated defs, ``g = jax.jit(f, ...)`` bindings, and
+    every call site of either)."""
+    funcs: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            funcs.setdefault(node.name, node)
+
+    jitted: Dict[str, Tuple[Set[str], ast.FunctionDef]] = {}
+
+    def resolve(call: ast.Call, fn: Optional[ast.FunctionDef],
+                bind: Optional[str]) -> None:
+        entries = _jit_static_argnames(call)
+        if entries is None:
+            return
+        names = set()
+        for name, node in entries:
+            if name is None:
+                p.emit("SC004", node,
+                       "static_argnames entry is not a string literal — "
+                       "the jit cache key cannot be audited statically")
+                continue
+            names.add(name)
+        if fn is not None:
+            params = {a.arg for a in (fn.args.args + fn.args.kwonlyargs
+                                      + fn.args.posonlyargs)}
+            for name in sorted(names - params):
+                p.emit("SC004", call,
+                       f"static_argnames entry '{name}' is not a parameter "
+                       f"of '{fn.name}' — jit would raise/retrace")
+            if bind:
+                jitted[bind] = (names & params, fn)
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call):
+                    resolve(dec, node, node.name)
+        elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            targets = [t.id for t in node.targets if isinstance(t, ast.Name)]
+            call = node.value
+            fn = None
+            if _dotted(call.func) in ("jax.jit", "jit") and call.args:
+                fname = _dotted(call.args[0])
+                fn = funcs.get(fname) if fname else None
+            resolve(call, fn, targets[0] if targets and fn else None)
+
+    # call-site hashability for every resolved jitted binding
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = _dotted(node.func)
+        if callee not in jitted:
+            continue
+        statics, fn = jitted[callee]
+        params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+        for i, arg in enumerate(node.args):
+            if i < len(params) and params[i] in statics and \
+                    isinstance(arg, _UNHASHABLE_NODES):
+                p.emit("SC004", arg,
+                       f"unhashable value passed positionally for static "
+                       f"arg '{params[i]}' of '{fn.name}'")
+        for kw in node.keywords:
+            if kw.arg in statics and isinstance(kw.value, _UNHASHABLE_NODES):
+                p.emit("SC004", kw.value,
+                       f"unhashable value passed for static arg "
+                       f"'{kw.arg}' of '{fn.name}'")
+
+
+def _check_unused_imports(tree: ast.Module, p: _Pass) -> None:
+    """SC006 over module-level imports. Names referenced anywhere (including
+    inside ``__all__`` string lists and doctest-invisible attribute roots)
+    count as used; ``__init__.py`` re-export files are exempt."""
+    if pathlib.PurePath(p.path).name == "__init__.py":
+        return
+    imported: Dict[str, ast.AST] = {}
+    for node in tree.body:
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                name = (a.asname or a.name).split(".")[0]
+                imported[name] = node
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                imported[a.asname or a.name] = node
+
+    used: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            root = _dotted(node)
+            if root:
+                used.add(root.split(".")[0])
+        elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+            used.add(node.value)  # __all__ entries / string annotations
+    for name, node in sorted(imported.items()):
+        if name not in used:
+            p.emit("SC006", node,
+                   f"'{name}' imported but unused (dead import)")
+
+
+# ------------------------------------------------------------------ drivers
+
+
+def lint_source(source: str, path: str = "<string>",
+                rules: Optional[Sequence[str]] = None) -> List[LintViolation]:
+    rules = tuple(rules) if rules else ALL_RULES
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [LintViolation("SC000", path, e.lineno or 0,
+                              f"syntax error: {e.msg}")]
+    p = _Pass(path, rules)
+    p.visit(tree)
+    if "SC004" in p.rules:
+        _check_static_args(tree, p)
+    if "SC006" in p.rules:
+        _check_unused_imports(tree, p)
+    return sorted(p.out, key=lambda v: (v.path, v.line, v.rule))
+
+
+def lint_paths(paths: Iterable, *,
+               rules: Optional[Sequence[str]] = None) -> List[LintViolation]:
+    out: List[LintViolation] = []
+    for path in paths:
+        path = pathlib.Path(path)
+        files = sorted(path.rglob("*.py")) if path.is_dir() else [path]
+        for f in files:
+            out.extend(lint_source(f.read_text(), str(f), rules))
+    return out

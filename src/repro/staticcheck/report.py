@@ -1,0 +1,135 @@
+"""Report structures shared by the jaxpr auditor and its drivers.
+
+``ProgramTrace`` is the hand-off format of ``Engine.trace_programs()``: one
+traced-but-never-executed compiled program plus the context the auditor
+needs to know what the program *should* look like (which policy governs its
+collectives, how many tokens cross the wire per step, which dtype the
+boundary must hold). Everything else here is plain result plumbing:
+``CollectiveRecord`` rows for the per-program collective inventory,
+``Finding`` for a rule hit, and ``ProgramReport``/``AuditReport`` for
+aggregation and table rendering.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+__all__ = [
+    "CollectiveRecord", "Finding", "ProgramReport", "ProgramTrace",
+    "AuditReport",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveRecord:
+    """One collective eqn found while walking a program's jaxpr.
+
+    ``bytes_per_device`` counts the operand bytes one device contributes;
+    ``bytes_on_wire`` scales by the collective's traffic pattern over the
+    named axes (gather/all_to_all move ~(N-1)/N of N shards; psum moves the
+    operand ~2x in a ring — we report the simple N* upper bound so dense vs
+    compressed programs compare on equal footing).
+    """
+
+    primitive: str                      # psum / all_gather / all_to_all / ...
+    axes: Tuple[str, ...]               # mesh axis names the eqn runs over
+    dtype: str                          # operand dtype
+    shape: Tuple[int, ...]              # operand (per-device) shape
+    bytes_per_device: int               # operand bytes one device sends
+    axis_size: int                      # product of the named axes' sizes
+    source: str = ""                    # jaxpr provenance (best effort)
+
+    @property
+    def bytes_on_wire(self) -> int:
+        return self.bytes_per_device * max(1, self.axis_size)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One audit-rule hit against one program."""
+
+    rule: str                           # e.g. "dense-collective"
+    program: str                        # program name ("mixed", "decode", ...)
+    message: str
+    severity: str = "error"             # "error" | "info"
+
+    def __str__(self) -> str:
+        return f"[{self.severity.upper()}] {self.program}: {self.rule}: {self.message}"
+
+
+@dataclasses.dataclass
+class ProgramTrace:
+    """One compiled engine program, traced (never executed) for auditing."""
+
+    name: str                           # decode / chunk / mixed / prefill / ...
+    jaxpr: Any                          # jax.core.ClosedJaxpr
+    policy: Any                         # CompressionPolicy governing this program
+    n_tokens: int                       # wire tokens/step (the min_tokens gate input)
+    compute_dtype: str                  # cfg.dtype the boundary must hold
+    is_step: bool                       # hot-path per-step program?
+    axis_sizes: Dict[str, int] = dataclasses.field(default_factory=dict)
+    tp_axis: str = "model"
+    # boundary avals (ShapeDtypeStructs): logits out, state in/out pytrees
+    logits_out: Any = None
+    state_in: Any = None
+    state_out: Any = None
+    retrace: Optional[Callable[[], Any]] = None  # re-derive jaxpr (determinism)
+
+
+@dataclasses.dataclass
+class ProgramReport:
+    """Collective inventory + rule findings for one traced program."""
+
+    name: str
+    collectives: List[CollectiveRecord]
+    findings: List[Finding]
+    compressed_expected: bool
+    n_tokens: int
+
+    @property
+    def ok(self) -> bool:
+        return not any(f.severity == "error" for f in self.findings)
+
+    @property
+    def tp_bytes_on_wire(self) -> int:
+        return sum(r.bytes_on_wire for r in self.collectives)
+
+
+@dataclasses.dataclass
+class AuditReport:
+    """Aggregate over every program of one engine configuration."""
+
+    label: str
+    programs: List[ProgramReport] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return all(p.ok for p in self.programs)
+
+    def failures(self) -> List[Finding]:
+        return [f for p in self.programs for f in p.findings
+                if f.severity == "error"]
+
+    def format_table(self) -> str:
+        """The collective/bytes table ``scripts/static_audit.py`` prints."""
+        rows = [("program", "collective", "axes", "dtype", "shape",
+                 "B/dev", "axis", "B/wire")]
+        for p in self.programs:
+            tag = f"{p.name}{'*' if p.compressed_expected else ''}"
+            if not p.collectives:
+                rows.append((tag, "-", "-", "-", "-", "-", "-", "-"))
+            for r in p.collectives:
+                rows.append((tag, r.primitive, "x".join(r.axes), r.dtype,
+                             str(tuple(r.shape)), str(r.bytes_per_device),
+                             str(r.axis_size), str(r.bytes_on_wire)))
+        widths = [max(len(row[i]) for row in rows) for i in range(len(rows[0]))]
+        lines = ["  ".join(c.ljust(w) for c, w in zip(row, widths)).rstrip()
+                 for row in rows]
+        lines.insert(1, "-" * len(lines[0]))
+        header = [f"== {self.label}: {'OK' if self.ok else 'FAIL'} "
+                  f"({len(self.programs)} programs; * = compressed wire expected)"]
+        body = header + lines
+        fails = self.failures()
+        if fails:
+            body += [""] + [str(f) for f in fails]
+        return "\n".join(body)

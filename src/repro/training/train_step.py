@@ -2,10 +2,9 @@
 param/opt-state/batch shardings for pjit."""
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Callable, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.tp import TPContext

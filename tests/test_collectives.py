@@ -241,6 +241,95 @@ def test_two_phase_downgrade_warns_once_and_strict_raises():
     assert not any("two_phase" in str(w.message) for w in caught2), caught2
 
 
+def test_two_phase_downgrade_warns_per_site_not_per_process():
+    """Regression: the downgrade warning used to dedup on the reason string
+    alone, so ONE engine's fallback silenced every later engine's — a second
+    policy/shape hitting the same downgrade reason must warn again, while the
+    exact same site stays deduped."""
+    import warnings
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import collectives
+    from repro.core.collectives import compressed_psum, reset_downgrade_warnings
+    from repro.core.formats import MXSpec
+
+    rng = np.random.default_rng(1)
+    x64 = jnp.asarray(rng.normal(size=(2, 8, 64)), jnp.float32)
+    x128 = jnp.asarray(rng.normal(size=(2, 8, 128)), jnp.float32)
+    spec_a = MXSpec.make("fp4_e2m1", 32, "e8m0")
+    spec_b = MXSpec.make("fp5_e2m2", 16, "e8m0")
+
+    def trace(x, spec):
+        f = _one_device_island(
+            lambda xl: compressed_psum(xl, "model", spec, variant="two_phase",
+                                       axis_size=0))
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            jax.make_jaxpr(f)(x)
+        return [w for w in caught if "two_phase" in str(w.message)]
+
+    reset_downgrade_warnings()
+    assert len(trace(x64, spec_a)) == 1          # first site warns
+    assert len(trace(x64, spec_a)) == 0          # same site: deduped
+    assert len(trace(x64, spec_b)) == 1          # same reason, other policy
+    assert len(trace(x128, spec_a)) == 1         # same reason, other shape
+    reset_downgrade_warnings()
+    assert len(trace(x64, spec_a)) == 1          # reset forgets the history
+    assert collectives._DOWNGRADE_WARNED          # and repopulates
+    reset_downgrade_warnings()
+
+
+def _element_format_names():
+    from repro.core.formats import ELEMENT_FORMATS  # jax-free module
+
+    return sorted(ELEMENT_FORMATS)
+
+
+@pytest.mark.parametrize("fmt", _element_format_names())
+def test_wire_payload_matches_wire_arrays_shape(fmt):
+    """Satellite contract test: for EVERY registered MX element format, what
+    compressed_all_gather / compressed_psum actually put on the wire (the
+    uint8 all_gather operands in the traced island) is byte-for-byte the
+    ``wire_arrays_shape`` prediction — payload lastdim n*bits/8, one scale
+    byte per block."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.collectives import compressed_all_gather, compressed_psum
+    from repro.core.formats import MXSpec
+    from repro.core.mx import wire_arrays_shape
+    from repro.staticcheck import collect_collectives
+
+    block = 8
+    n = 64  # divisible by 8 blocks and by 8/bits packing for every format
+    spec = MXSpec.make(fmt, block, "e8m0")
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 3, n)),
+                    jnp.float32)
+    payload_shape, scales_shape = wire_arrays_shape(x.shape, spec)
+
+    for name, fn in [
+        ("all_gather", lambda xl: compressed_all_gather(xl, "model", spec)),
+        ("psum", lambda xl: compressed_psum(xl, "model", spec)),
+    ]:
+        island = _one_device_island(fn, out_extra_dim=(name == "all_gather"))
+        jaxpr = jax.make_jaxpr(island)(x)
+        u8 = [r for r in collect_collectives(jaxpr.jaxpr)
+              if r.dtype == "uint8"]
+        assert len(u8) == 2, (fmt, name, u8)
+        payload, scales = u8
+        assert payload.shape == payload_shape, (fmt, name, payload)
+        assert scales.shape == scales_shape, (fmt, name, scales)
+        assert payload.bytes_per_device == np.prod(payload_shape)
+        assert scales.bytes_per_device == np.prod(scales_shape)
+        # no dense float of x's wire size leaks alongside the compressed pair
+        assert not any(r.dtype == "float32" and r.shape[-1] == n
+                       for r in collect_collectives(jaxpr.jaxpr)), (fmt, name)
+
+
 def test_compressed_all_gather_roundtrip():
     run_case("""
     from repro.core.collectives import compressed_all_gather
