@@ -136,6 +136,9 @@ def run_policy(name, policy, model, params, mesh, args, *,
         "prefill_chunk": engine.prefill_chunk,
         "token_budget": engine.token_budget,
         "prefix_cache": engine.prefix_cache,
+        # kernel on/off column: True when the paged read path runs the
+        # gather-free Pallas kernel instead of the jnp pool[tables] gather
+        "pallas_kernel": engine.cache_spec.use_pallas,
         "prefill_tokens_skipped": s["prefill_tokens_skipped"],
         "prefix_hit_rate": round(s["prefix_hit_rate"], 4),
         "steps": s["n_steps"],
@@ -238,20 +241,26 @@ def compare_prefill_modes(model, params, mesh, args):
         rec_w, out_w, eng_w = run_policy(
             f"{cname}/whole", NO_COMPRESSION, model, params, mesh, args,
             cache_spec=cspec, prefill_chunk=0)
-        # token_budget=0: this comparison isolates the prefill SCHEDULING
-        # axis (whole-prompt HOL blocking vs chunked interleaving) on the
-        # split scheduler; the step-fusion axis has its own comparison
-        # (compare_step_modes), where the per-token history gather of the
-        # flattened program doesn't confound the long-prompt TPOT numbers
+        # chunked side runs the engine's DEFAULT scheduler — the unified
+        # mixed token-budget step. (This used to pin token_budget=0 because
+        # the mixed step's per-token pool[tables] gather was O(budget x
+        # capacity) at long prompts; the gather-free paged-attention kernel
+        # removed that inflation, so the pin is gone and this comparison
+        # now measures the serving configuration users actually run.)
         rec_c, out_c, eng_c = run_policy(
             f"{cname}/chunk{chunk}", NO_COMPRESSION, model, params, mesh,
-            args, cache_spec=cspec, prefill_chunk=chunk, token_budget=0)
+            args, cache_spec=cspec, prefill_chunk=chunk)
         # the chunk program must compile exactly once across the whole mix
         # of prompt lengths (vs one whole-prompt program per length bucket)
         assert eng_c.prefill_cache_size() == 1, eng_c.prefill_cache_size()
         assert eng_c.decode_cache_size() == 1, eng_c.decode_cache_size()
         match = float(np.mean([np.mean(c[:len(w)] == w[:len(c)])
                                for c, w in zip(out_c, out_w)]))
+        if cspec is None:
+            # dense pools: the pool roundtrip is exact, so the chunked
+            # (mixed-step) run must reproduce the whole-prompt run token
+            # for token — the scheduling axis never changes outputs
+            assert match == 1.0, match
         speedup = (rec_w["tpot_ms"]["p95"] / rec_c["tpot_ms"]["p95"]
                    if rec_c["tpot_ms"]["p95"] > 0 else float("nan"))
         print(f"  [{cname}] tpot p95 {rec_w['tpot_ms']['p95']:.2f} -> "
@@ -326,6 +335,64 @@ def compare_step_modes(model, params, mesh, args):
             "dispatch_ratio": round(ratio, 3),
             "mixed_fewer_dispatches": True,
             "token_match_vs_split": 1.0,
+        })
+    return out
+
+
+def compare_kernel_modes(model, params, args):
+    """Read-path comparison: the jnp ``pool[tables]`` gather vs the
+    gather-free Pallas paged-attention kernel (``<spec>+pallas``), under the
+    same Poisson traffic and the unified mixed scheduler, in each requested
+    cache mode.
+
+    Runs on a single device (mesh=None): the kernel is a per-shard program —
+    under TP each shard would run it on its own KV heads, but the comparison
+    itself is about the cache read path, not the collectives. Reported per
+    mode: per-step wall time jnp vs kernel and the delta (on CPU the kernel
+    runs in Pallas interpret mode, so treat the CPU delta as plumbing
+    overhead, not the TPU story — on TPU the kernel replaces an
+    O(capacity) HBM gather with one block DMA per resident block). Outputs
+    are asserted TOKEN-IDENTICAL: the kernel changes how pool bytes are
+    read, never which bytes are read or what they decode to.
+    """
+    chunk = args.prefill_chunk or 2 * args.block_size
+    budget = args.token_budget or chunk + args.slots
+    cache_modes = ["bf16"]
+    if args.cache_spec and KVCacheSpec.parse(args.cache_spec).quantized:
+        cache_modes.append(KVCacheSpec.parse(args.cache_spec).mx.name)
+    print(f"\n-- kernel modes: jnp gather vs Pallas paged-attention kernel "
+          f"(single device, mixed step, token budget {budget}) --")
+    out = []
+    for cname in cache_modes:
+        rec_j, out_j, eng_j = run_policy(
+            f"{cname}/jnp", NO_COMPRESSION, model, params, None, args,
+            cache_spec=cname, prefill_chunk=chunk, token_budget=budget)
+        rec_k, out_k, eng_k = run_policy(
+            f"{cname}/pallas", NO_COMPRESSION, model, params, None, args,
+            cache_spec=f"{cname}+pallas", prefill_chunk=chunk,
+            token_budget=budget)
+        # one program each way: the kernel slots into the existing unified
+        # step without adding compilation buckets
+        assert eng_k.prefill_cache_size() == 1, eng_k.prefill_cache_size()
+        assert eng_k.decode_cache_size() == 1, eng_k.decode_cache_size()
+        # identical outputs: the kernel changes the read path, not the math
+        for i, (a, b) in enumerate(zip(out_k, out_j)):
+            assert np.array_equal(a, b), (
+                f"[{cname}] request {i} diverged between jnp and kernel")
+        step_j = rec_j["wall_s"] / max(1, rec_j["steps"])
+        step_k = rec_k["wall_s"] / max(1, rec_k["steps"])
+        print(f"  [{cname}] per-step wall {step_j * 1e3:.2f} ms (jnp) vs "
+              f"{step_k * 1e3:.2f} ms (pallas), delta "
+              f"{(step_k - step_j) * 1e3:+.2f} ms/step; token match: exact")
+        out.append({
+            "cache_mode": cname,
+            "chunk": chunk,
+            "token_budget": budget,
+            "jnp": rec_j, "pallas": rec_k,
+            "step_ms_jnp": round(step_j * 1e3, 3),
+            "step_ms_pallas": round(step_k * 1e3, 3),
+            "step_ms_delta": round((step_k - step_j) * 1e3, 3),
+            "token_match_vs_jnp": 1.0,
         })
     return out
 
@@ -470,6 +537,12 @@ def main():
                     help="prompt length for the head-of-line-blocking "
                          "comparison (long enough that a whole-prompt "
                          "prefill dominates a decode step)")
+    ap.add_argument("--kernel", type=int, default=0,
+                    help="1: also compare the jnp pool-gather read path vs "
+                         "the gather-free Pallas paged-attention kernel "
+                         "(cache_spec '+pallas' suffix) per cache mode, on a "
+                         "single device, with token-match and compile-once "
+                         "asserts (CPU runs the kernel in interpret mode)")
     ap.add_argument("--single-device", action="store_true",
                     help="skip the host mesh (no real collectives)")
     args = ap.parse_args()
@@ -503,6 +576,8 @@ def main():
     if args.shared_prefix_len:
         result["prefix_cache"] = compare_prefix_cache(model, params, mesh,
                                                       args)
+    if args.kernel:
+        result["kernel_modes"] = compare_kernel_modes(model, params, args)
     OUT_DIR.mkdir(parents=True, exist_ok=True)
     out = OUT_DIR / "serve_throughput.json"
     out.write_text(json.dumps(result, indent=1))

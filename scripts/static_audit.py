@@ -36,11 +36,15 @@ sys.path.insert(0, str(ROOT / "src"))
 
 
 ENGINE_MATRIX = [
-    # (label, cache_spec, token_budget) — dense+fp4 × split+mixed
+    # (label, cache_spec, token_budget) — dense+fp4 × split+mixed, plus the
+    # gather-free Pallas read path (+pallas): the audit recurses into the
+    # pallas_call kernel jaxpr and additionally enforces the pool-gather rule
     ("dense-mixed", None, None),
     ("dense-split", None, 0),
     ("fp4-mixed", "fp4_e2m1", None),
     ("fp4-split", "fp4_e2m1", 0),
+    ("dense-mixed-pallas", "bf16+pallas", None),
+    ("fp4-mixed-pallas", "fp4_e2m1+pallas", None),
 ]
 
 

@@ -210,15 +210,20 @@ class KVCacheSpec:
     ``mx=None`` is the dense default: pools hold the engine's ``cache_dtype``
     and the data path is bit-identical to the pre-quantization engine. With an
     ``MXSpec``, pools hold the wire format (bit-packed payload + scale bytes),
-    quantized on append and dequantized on read — in pure jnp, or inside the
-    fused Pallas dequant-attention kernel when ``use_pallas`` is set. Wire
-    bytes are deterministic post-quantization, which is what lets the prefix
-    cache share quantized blocks across requests by reference
-    (docs/serving.md).
+    quantized on append and dequantized on read.
+
+    ``use_pallas`` routes the paged READ path (chunk, decode, and mixed alike)
+    through the gather-free Pallas kernel (``kernels/paged_attention``), which
+    walks each row's block table in VMEM instead of gathering the full-capacity
+    ``pool[table]`` through HBM — fusing MX dequantization when the pool is a
+    wire format, a plain cast when it is dense. The jnp gather path stays the
+    CPU/parity oracle. Wire bytes are deterministic post-quantization, which
+    is what lets the prefix cache share quantized blocks across requests by
+    reference (docs/serving.md).
     """
 
     mx: Optional[MXSpec] = None
-    use_pallas: bool = False  # fused Pallas dequant-attention on the read path
+    use_pallas: bool = False  # gather-free Pallas kernel on the paged read path
 
     @property
     def quantized(self) -> bool:
@@ -229,7 +234,9 @@ class KVCacheSpec:
         """Accept a KVCacheSpec, an MXSpec, None, or a CLI string: ``bf16`` /
         ``none`` / ``dense`` => dense; an element-format name (``fp4_e2m1``)
         => that format at block 32 / e8m0; a full ``<elem>_b<block>_<scale>``
-        spec name is parsed exactly."""
+        spec name is parsed exactly. A ``+pallas`` suffix on any string form
+        (``bf16+pallas``, ``fp4_e2m1+pallas``) turns on the gather-free
+        Pallas read kernel for that storage format."""
         if spec is None:
             return cls()
         if isinstance(spec, cls):
@@ -237,29 +244,35 @@ class KVCacheSpec:
         if isinstance(spec, MXSpec):
             return cls(mx=spec)
         name = str(spec).lower()
+        use_pallas = False
+        if name.endswith("+pallas"):
+            use_pallas, name = True, name[: -len("+pallas")]
         if name in ("bf16", "bfloat16", "none", "dense", "fp32", "float32"):
-            return cls()
+            return cls(use_pallas=use_pallas)
         if name in ELEMENT_FORMATS:
-            return cls(mx=MXSpec.make(name, 32, "e8m0"))
+            return cls(mx=MXSpec.make(name, 32, "e8m0"), use_pallas=use_pallas)
         for scale in SCALE_FORMATS:
             suffix = f"_{scale}"
             if name.endswith(suffix):
                 head = name[: -len(suffix)]
                 elem, _, block = head.rpartition("_b")
                 if elem in ELEMENT_FORMATS and block.isdigit():
-                    return cls(mx=MXSpec.make(elem, int(block), scale))
+                    return cls(mx=MXSpec.make(elem, int(block), scale),
+                               use_pallas=use_pallas)
         raise ValueError(
             f"unknown KV cache spec {spec!r}: expected 'bf16', an element "
             f"format ({', '.join(sorted(ELEMENT_FORMATS))}), or a full MX "
-            f"spec name like 'fp4_e2m1_b32_e8m0'"
+            f"spec name like 'fp4_e2m1_b32_e8m0', optionally with a "
+            f"'+pallas' suffix"
         )
 
     def describe(self) -> str:
+        pallas = "+pallas" if self.use_pallas else ""
         if not self.quantized:
-            return "dense"
+            return "dense" + pallas
         return (
             f"{self.mx.name} ({self.mx.effective_bits:.2f} eff bits, "
-            f"{self.mx.compression_ratio():.2f}x vs bf16)"
+            f"{self.mx.compression_ratio():.2f}x vs bf16){pallas}"
         )
 
 

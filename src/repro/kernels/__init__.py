@@ -4,10 +4,13 @@ The paper's whole premise is that compression only wins if encode/decode is
 fast enough not to offset the communication saving (§4.1, §6). These kernels
 are that codec: mx_quant (compress), mx_dequant (+ fused dequant-reduce
 epilogue). ops.py holds the jit'd dispatch wrappers, ref.py the pure-jnp
-oracle the tests compare against (bit-exact).
+oracle the tests compare against (bit-exact). paged_attention.py is the
+cache-side consumer: the gather-free paged-attention kernel that walks the
+block table and dequantizes MX wire pools in-kernel (dense pools run the
+same body through a cast).
 """
-from repro.kernels.mx_kv import paged_dequant_attention
 from repro.kernels.ops import mx_dequant_reduce, mx_dequantize, mx_quantize
+from repro.kernels.paged_attention import paged_attention
 
 __all__ = ["mx_quantize", "mx_dequantize", "mx_dequant_reduce",
-           "paged_dequant_attention"]
+           "paged_attention"]

@@ -1,0 +1,231 @@
+"""Pallas kernel: gather-free paged attention over block-table pools.
+
+ONE kernel serves all three paged read geometries of ``models/attention.py``
+— split decode, split prefill chunk, and the unified mixed token-budget step.
+The grid is (rows, blocks-per-table): for each query row the kernel walks
+that row's block-table entries via scalar prefetch, DMA-ing exactly one pool
+block at a time into VMEM — the ``pool[table].reshape(cap, ...)``
+full-capacity HBM gather of the jnp reference path never happens. MX
+wire-format pools are dequantized per streamed block inside the body with
+the codec primitives from ``mx_dequant``; dense pools run the same body
+through a cast, so both formats share one kernel behind a static switch.
+
+Running softmax statistics (m, l, acc) persist in VMEM scratch across the
+innermost (block) grid dimension — the flash-attention recurrence — and the
+current step's compute-precision K/V (``k_extra``/``v_extra``: the prefill
+chunk's own tokens, or the mixed step's in-batch K/V) is folded in at the
+last block before normalization.
+
+Masking follows the same finite ``-1e30`` convention as
+``models/attention.py``: initializing the running max at ``NEG_INF`` (not
+``-inf``) makes a fully-masked row degrade to a uniform average over its
+keys — exactly what ``jax.nn.softmax`` over all-``NEG_INF`` scores produces
+in the jnp oracle — so pad rows match instead of going NaN.
+
+On CPU the kernel runs in interpret mode (the parity oracle + CI path); on
+TPU the same code lowers through Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import MXSpec
+from repro.kernels.mx_dequant import _dequant_tile
+
+__all__ = ["paged_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(tables_ref, hist_ref, *refs, spec, kv_heads, head_dim, q_heads,
+            seq_q, block_size, n_blocks, scale, window, has_extra):
+    q_ref = refs[0]
+    if spec is None:
+        k_ref, v_ref = refs[1:3]
+        i = 3
+    else:
+        kp_ref, ks_ref, vp_ref, vs_ref = refs[1:5]
+        i = 5
+    qp_ref = refs[i]
+    i += 1
+    if has_extra:
+        ke_ref, ve_ref, te_ref = refs[i:i + 3]
+        i += 3
+    out_ref, m_scr, l_scr, acc_scr = refs[i:i + 4]
+
+    r, j = pl.program_id(0), pl.program_id(1)
+    KV, G, hd = kv_heads, q_heads // kv_heads, head_dim
+    SqG = seq_q * G
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    # (Sq, H*hd) -> (KV, Sq*G, hd): fold query heads into batched GQA groups
+    q = q_ref[0].astype(jnp.float32)
+    qg = q.reshape(seq_q, KV, G, hd).transpose(1, 0, 2, 3).reshape(KV, SqG, hd)
+    q_pos = qp_ref[0]                                          # (Sq,) int32
+    hist = hist_ref[r]
+
+    def accumulate(k, v, t_valid):
+        """Fold one batch of keys into the online-softmax state. k/v are
+        (T', kv_dim) fp32; t_valid is the (Sq, T') mask."""
+        Tb = k.shape[0]
+        kh = k.reshape(Tb, KV, hd).transpose(1, 0, 2)          # (KV, T', hd)
+        vh = v.reshape(Tb, KV, hd).transpose(1, 0, 2)
+        s = jax.lax.dot_general(
+            qg, kh, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale        # (KV, SqG, T')
+        valid = jnp.broadcast_to(
+            t_valid[:, None, :], (seq_q, G, Tb)).reshape(1, SqG, Tb)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+        pv = jax.lax.dot_general(
+            p, vh, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)                # (KV, SqG, hd)
+        acc_scr[...] = acc_scr[...] * alpha[..., None] + pv
+        m_scr[...] = m_new
+
+    # this grid step's pool block: positions [j*bs, (j+1)*bs) of the row's
+    # logical sequence, valid below the row's history end and causally
+    t_row = j * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (seq_q, block_size), 1)
+    tv = (t_row < hist) & (t_row <= q_pos[:, None])
+    if window is not None:
+        tv = tv & (t_row > q_pos[:, None] - window)
+    if spec is None:
+        k = k_ref[0].astype(jnp.float32)                       # (bs, kv_dim)
+        v = v_ref[0].astype(jnp.float32)
+    else:
+        k = _dequant_tile(kp_ref[0], ks_ref[0], spec)
+        v = _dequant_tile(vp_ref[0], vs_ref[0], spec)
+    accumulate(k, v, tv)
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        if has_extra:
+            ke = ke_ref[...].astype(jnp.float32)               # (E, kv_dim)
+            ve = ve_ref[...].astype(jnp.float32)
+            te = te_ref[0]                                     # (E,) int32
+            ev = te[None, :] <= q_pos[:, None]                 # (Sq, E)
+            if window is not None:
+                ev = ev & (te[None, :] > q_pos[:, None] - window)
+            accumulate(ke, ve, ev)
+        out = acc_scr[...] / l_scr[...][..., None]             # (KV, SqG, hd)
+        out = out.reshape(KV, seq_q, G, hd).transpose(1, 0, 2, 3)
+        out_ref[...] = out.reshape(1, seq_q, KV * G * hd).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "spec", "kv_heads", "scale", "window", "out_dtype", "interpret"))
+def paged_attention(
+    q: jnp.ndarray,            # (R, Sq, H*hd) query rows
+    pool_k,                    # (n_blocks, bs, kv_dim) dense, or MXCompressed
+    pool_v,                    #   wire pools (payload+scales)
+    tables: jnp.ndarray,       # (R, nb) int32 per-row block-table row
+    hist_len: jnp.ndarray,     # (R,) int32 history end (exclusive) per row
+    q_pos: jnp.ndarray,        # (R, Sq) int32 query positions
+    k_extra=None,              # (E, kv_dim) compute-precision in-step keys
+    v_extra=None,              # (E, kv_dim)
+    t_extra=None,              # (R, E) int32 positions (or broadcastable (1, E))
+    *,
+    spec: MXSpec | None = None,  # None = dense pools
+    kv_heads: int,
+    scale: float,
+    window=None,
+    out_dtype=jnp.float32,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Gather-free paged GQA attention: walk each row's block table, stream
+    pool blocks through VMEM with online softmax, fold in optional in-step
+    K/V extras, return (R, Sq, H*hd).
+
+    Row r attends pool positions ``t < hist_len[r]`` (causally vs
+    ``q_pos[r]``, optionally sliding-window limited) read at pool precision
+    (dense cast or fused MX dequant), plus the shared ``k_extra`` keys at
+    positions ``t_extra[r]`` in compute precision. Geometry per caller:
+    decode (R=B, Sq=1, no extras — the scatter-written token is already in
+    the pool), chunk (R=1, Sq=C, extras=the chunk itself), mixed (R=T, Sq=1,
+    extras=the flattened step's K/V with the (T, T) same-slot position mask).
+    """
+    R, Sq, q_dim = q.shape
+    nb = tables.shape[1]
+    if spec is None:
+        bs, kv_dim = pool_k.shape[1], pool_k.shape[2]
+    else:
+        bs = pool_k.payload.shape[1]
+        kv_dim = pool_k.payload.shape[-1] * 8 // spec.elem.bits
+    hd = kv_dim // kv_heads
+    H = q_dim // hd
+    G = H // kv_heads
+    has_extra = k_extra is not None
+
+    # index maps take (grid indices..., *scalar-prefetch refs); pool-block
+    # specs index the pool by the row's table entry — one block DMA per step
+    def _q_map(r, j, tbl, hl):
+        return (r, 0, 0)
+
+    def _blk_map(r, j, tbl, hl):
+        return (tbl[r, j], 0, 0)
+
+    def _row_map(r, j, tbl, hl):
+        return (r, 0)
+
+    def _whole_map(r, j, tbl, hl):
+        return (0, 0)
+
+    in_specs = [pl.BlockSpec((1, Sq, q_dim), _q_map)]
+    operands = [q]
+    if spec is None:
+        in_specs += [pl.BlockSpec((1, bs, kv_dim), _blk_map),
+                     pl.BlockSpec((1, bs, kv_dim), _blk_map)]
+        operands += [pool_k, pool_v]
+    else:
+        pb, sb = pool_k.payload.shape[-1], pool_k.scales.shape[-1]
+        in_specs += [pl.BlockSpec((1, bs, pb), _blk_map),
+                     pl.BlockSpec((1, bs, sb), _blk_map),
+                     pl.BlockSpec((1, bs, pb), _blk_map),
+                     pl.BlockSpec((1, bs, sb), _blk_map)]
+        operands += [pool_k.payload, pool_k.scales,
+                     pool_v.payload, pool_v.scales]
+    in_specs.append(pl.BlockSpec((1, Sq), _row_map))
+    operands.append(q_pos.astype(jnp.int32))
+    if has_extra:
+        E = k_extra.shape[0]
+        t_extra = jnp.broadcast_to(t_extra.astype(jnp.int32), (R, E))
+        in_specs += [pl.BlockSpec((E, kv_dim), _whole_map),
+                     pl.BlockSpec((E, kv_dim), _whole_map),
+                     pl.BlockSpec((1, E), _row_map)]
+        operands += [k_extra, v_extra, t_extra]
+
+    kernel = functools.partial(
+        _kernel, spec=spec, kv_heads=kv_heads, head_dim=hd, q_heads=H,
+        seq_q=Sq, block_size=bs, n_blocks=nb, scale=scale, window=window,
+        has_extra=has_extra)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(R, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, Sq, q_dim), _q_map),
+        scratch_shapes=[
+            pltpu.VMEM((kv_heads, Sq * G), jnp.float32),       # running max
+            pltpu.VMEM((kv_heads, Sq * G), jnp.float32),       # running denom
+            pltpu.VMEM((kv_heads, Sq * G, hd), jnp.float32),   # accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, Sq, q_dim), out_dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), hist_len.astype(jnp.int32), *operands)

@@ -210,6 +210,27 @@ def attention(
     return y, cache
 
 
+def _paged_attend_kernel(q, pool_k, pool_v, tables, hist_len, q_pos,
+                         k_extra=None, v_extra=None, t_extra=None, *,
+                         cache_spec: KVCacheSpec, cfg: ModelConfig,
+                         window: Optional[int]):
+    """Route one paged read through the gather-free Pallas kernel
+    (``kernels/paged_attention``): walk each row's block-table entries in
+    VMEM with online softmax instead of gathering ``pool[tables]`` at full
+    capacity through HBM, dequantizing MX wire blocks in-kernel. All three
+    paged geometries (decode, chunk, mixed) land here; q is (R, Sq, H, hd)
+    and the return is (R, Sq, H*hd) in q's dtype."""
+    from repro.kernels.paged_attention import paged_attention
+
+    R, Sq = q.shape[:2]
+    return paged_attention(
+        q.reshape(R, Sq, -1), pool_k, pool_v, tables, hist_len, q_pos,
+        k_extra, v_extra, t_extra,
+        spec=cache_spec.mx, kv_heads=cfg.n_kv_heads,
+        scale=cfg.head_dim**-0.5, window=window, out_dtype=q.dtype,
+        interpret=jax.default_backend() == "cpu")
+
+
 def quantize_kv_pages(k: jnp.ndarray, v: jnp.ndarray, spec) -> tuple:
     """Quantize dense K/V (..., kv_dim) into wire pages (payload+scales pairs
     along the last axis) — the single append-path codec entry used by both
@@ -247,9 +268,10 @@ def paged_attention_decode(
     garbage but masked out by the engine. Returns (out, pool_k, pool_v).
 
     With a quantized ``cache_spec`` the pools are ``MXCompressed`` wire
-    arrays: the new K/V is quantized before the scatter and the gathered
-    pages are dequantized on read — in pure jnp, or inside the fused Pallas
-    dequant-attention kernel when ``cache_spec.use_pallas`` is set.
+    arrays: the new K/V is quantized before the scatter and the pages are
+    dequantized on read. With ``cache_spec.use_pallas`` the read side (dense
+    or quantized) runs the gather-free Pallas kernel instead of the jnp
+    ``pool[tables]`` gather.
     """
     B = x.shape[0]
     a = ctx.axis if ctx.tp else None
@@ -276,31 +298,32 @@ def paged_attention_decode(
         # recompiles, breaking the engine's compile-once invariant
         pool_k = constrain_wire_pool(ctx, pool_k)
         pool_v = constrain_wire_pool(ctx, pool_v)
-
-        # gathered wire pages, logical (B, T, wire) like the dense layout
-        k_pl = pool_k.payload[tables].reshape(B, -1, pool_k.payload.shape[-1])
-        k_sc = pool_k.scales[tables].reshape(B, -1, pool_k.scales.shape[-1])
-        v_pl = pool_v.payload[tables].reshape(B, -1, pool_v.payload.shape[-1])
-        v_sc = pool_v.scales[tables].reshape(B, -1, pool_v.scales.shape[-1])
-        if cache_spec.use_pallas:
-            from repro.kernels.mx_kv import paged_dequant_attention
-
-            out = paged_dequant_attention(
-                q[:, 0], k_pl, k_sc, v_pl, v_sc, lengths, mxs,
-                kv_heads=cfg.n_kv_heads, scale=cfg.head_dim**-0.5,
-                window=window, out_dtype=q.dtype,
-                interpret=jax.default_backend() == "cpu")[:, None, :]
-            out = constrain(ctx, out, ctx.batch, None, a)
-            y = row_linear(ctx, out, params["wo"]["w"], n_tokens=B)
-            return y, pool_k, pool_v
-        k_all = mx.dequantize(MXCompressed(k_pl, k_sc), mxs, out_dtype=q.dtype)
-        v_all = mx.dequantize(MXCompressed(v_pl, v_sc), mxs, out_dtype=q.dtype)
     else:
         pool_k = pool_k.at[block_ids, offs].set(k_new[:, 0].astype(pool_k.dtype))
         pool_v = pool_v.at[block_ids, offs].set(v_new[:, 0].astype(pool_v.dtype))
         pool_k = constrain(ctx, pool_k, None, None, a)
         pool_v = constrain(ctx, pool_v, None, None, a)
 
+    if cache_spec is not None and cache_spec.use_pallas:
+        # gather-free read: the kernel walks each slot's block-table row; the
+        # token just scattered above is already in the pool, so row b's
+        # history runs to lengths[b] + 1 and no in-step extras are needed
+        out = _paged_attend_kernel(
+            q, pool_k, pool_v, tables, lengths + 1, lengths[:, None],
+            cache_spec=cache_spec, cfg=cfg, window=window)
+        out = constrain(ctx, out, ctx.batch, None, a)
+        y = row_linear(ctx, out, params["wo"]["w"], n_tokens=B)
+        return y, pool_k, pool_v
+
+    if quantized:
+        # gathered wire pages, logical (B, T, wire) like the dense layout
+        k_pl = pool_k.payload[tables].reshape(B, -1, pool_k.payload.shape[-1])
+        k_sc = pool_k.scales[tables].reshape(B, -1, pool_k.scales.shape[-1])
+        v_pl = pool_v.payload[tables].reshape(B, -1, pool_v.payload.shape[-1])
+        v_sc = pool_v.scales[tables].reshape(B, -1, pool_v.scales.shape[-1])
+        k_all = mx.dequantize(MXCompressed(k_pl, k_sc), mxs, out_dtype=q.dtype)
+        v_all = mx.dequantize(MXCompressed(v_pl, v_sc), mxs, out_dtype=q.dtype)
+    else:
         # (B, max_blocks, bs, kv) -> logical (B, T, kv); block j of a slot's
         # table holds that slot's positions [j*bs, (j+1)*bs)
         k_all = pool_k[tables].reshape(B, -1, cfg.kv_dim)
@@ -368,27 +391,38 @@ def paged_attention_chunk(
     blk = jnp.where(p < cap, table_row[jnp.clip(p // bs, 0, nb - 1)], 0)
     offs = p % bs
 
-    # gather history BEFORE the append so the chunk's own K/V is counted once
-    # (in compute precision below, not through the pool roundtrip)
-    t_hist = jnp.arange(cap, dtype=jnp.int32)
-    t_hist = jnp.where(t_hist < start, t_hist, _T_INVALID)
-    if quantized:
-        mxs = cache_spec.mx
-        k_hist = mx.dequantize(MXCompressed(
-            pool_k.payload[table_row].reshape(1, cap, -1),
-            pool_k.scales[table_row].reshape(1, cap, -1)), mxs, out_dtype=q.dtype)
-        v_hist = mx.dequantize(MXCompressed(
-            pool_v.payload[table_row].reshape(1, cap, -1),
-            pool_v.scales[table_row].reshape(1, cap, -1)), mxs, out_dtype=q.dtype)
+    # read history BEFORE the append so the chunk's own K/V is counted once
+    # (in compute precision as extras, not through the pool roundtrip)
+    if cache_spec is not None and cache_spec.use_pallas:
+        # gather-free read: one table row (R=1), history below ``start``,
+        # the chunk itself folded in as compute-precision extras
+        out = _paged_attend_kernel(
+            q, pool_k, pool_v, table_row[None],
+            jnp.asarray(start, jnp.int32).reshape(1), p[None, :],
+            k_new[0].astype(q.dtype), v_new[0].astype(q.dtype), p[None, :],
+            cache_spec=cache_spec, cfg=cfg, window=window)
     else:
-        k_hist = pool_k[table_row].reshape(1, cap, -1).astype(q.dtype)
-        v_hist = pool_v[table_row].reshape(1, cap, -1).astype(q.dtype)
+        t_hist = jnp.arange(cap, dtype=jnp.int32)
+        t_hist = jnp.where(t_hist < start, t_hist, _T_INVALID)
+        if quantized:
+            mxs = cache_spec.mx
+            k_hist = mx.dequantize(MXCompressed(
+                pool_k.payload[table_row].reshape(1, cap, -1),
+                pool_k.scales[table_row].reshape(1, cap, -1)), mxs,
+                out_dtype=q.dtype)
+            v_hist = mx.dequantize(MXCompressed(
+                pool_v.payload[table_row].reshape(1, cap, -1),
+                pool_v.scales[table_row].reshape(1, cap, -1)), mxs,
+                out_dtype=q.dtype)
+        else:
+            k_hist = pool_k[table_row].reshape(1, cap, -1).astype(q.dtype)
+            v_hist = pool_v[table_row].reshape(1, cap, -1).astype(q.dtype)
 
-    k_all = jnp.concatenate([k_hist, k_new.astype(q.dtype)], axis=1)
-    v_all = jnp.concatenate([v_hist, v_new.astype(q.dtype)], axis=1)
-    t_pos = jnp.concatenate([t_hist, p])
-    out = _attend(q, k_all, v_all, p, t_pos, causal=True, window=window,
-                  scale=scale, kv_heads=cfg.n_kv_heads)
+        k_all = jnp.concatenate([k_hist, k_new.astype(q.dtype)], axis=1)
+        v_all = jnp.concatenate([v_hist, v_new.astype(q.dtype)], axis=1)
+        t_pos = jnp.concatenate([t_hist, p])
+        out = _attend(q, k_all, v_all, p, t_pos, causal=True, window=window,
+                      scale=scale, kv_heads=cfg.n_kv_heads)
 
     # append the chunk into the pools (wire-quantized via the shared codec
     # entry when the cache spec says so) — same constrain discipline as the
@@ -434,9 +468,11 @@ def paged_attention_mixed(
     and attended against the paged cache in one program.
 
     Every flattened token becomes its own attention batch row: token t
-    gathers ITS slot's paged history through ``tables[slot_ids[t]]`` (valid
+    reads ITS slot's paged history through ``tables[slot_ids[t]]`` (valid
     below ``slot_starts[slot_ids[t]]`` — everything written before this
-    step), and additionally attends the current batch's same-slot tokens at
+    step; a jnp gather, or a gather-free block-table walk under
+    ``cache_spec.use_pallas``), and additionally attends the current
+    batch's same-slot tokens at
     positions <= its own. Precision mirrors the split chunk/decode pair
     exactly: prefill tokens see same-chunk neighbours in COMPUTE precision
     (what ``paged_attention_chunk`` did), while a decode token sees its own
@@ -462,27 +498,15 @@ def paged_attention_mixed(
     bs = (pool_k.payload if quantized else pool_k).shape[1]
     cap = nb * bs
 
-    # per-row history: the slot's logical sequence below its pre-step write
-    # position (everything this step appends is attended in-batch instead)
+    # per-row history end: the slot's pre-step write position (everything
+    # this step appends is attended in-batch instead)
     start = slot_starts[slot_ids]                       # (T,)
-    t_hist = jnp.arange(cap, dtype=jnp.int32)[None, :]  # (1, cap)
-    t_hist = jnp.where(t_hist < start[:, None], t_hist, _T_INVALID)
     if quantized:
         mxs = cache_spec.mx
-        k_hist = mx.dequantize(MXCompressed(
-            pool_k.payload[my_tables].reshape(T, cap, -1),
-            pool_k.scales[my_tables].reshape(T, cap, -1)), mxs,
-            out_dtype=q.dtype)
-        v_hist = mx.dequantize(MXCompressed(
-            pool_v.payload[my_tables].reshape(T, cap, -1),
-            pool_v.scales[my_tables].reshape(T, cap, -1)), mxs,
-            out_dtype=q.dtype)
         kq, vq = quantize_kv_pages(k_new[0], v_new[0], mxs)
         k_rt = mx.dequantize(kq, mxs, out_dtype=q.dtype)
         v_rt = mx.dequantize(vq, mxs, out_dtype=q.dtype)
     else:
-        k_hist = pool_k[my_tables].reshape(T, cap, -1).astype(q.dtype)
-        v_hist = pool_v[my_tables].reshape(T, cap, -1).astype(q.dtype)
         k_rt = k_new[0].astype(pool_k.dtype).astype(q.dtype)
         v_rt = v_new[0].astype(pool_v.dtype).astype(q.dtype)
 
@@ -494,14 +518,41 @@ def paged_attention_mixed(
     same = (slot_ids[None, :] == slot_ids[:, None]) & valid[None, :]
     t_step = jnp.where(same, positions[None, :], _T_INVALID)    # (T, T)
 
-    k_all = jnp.concatenate(
-        [k_hist, jnp.broadcast_to(k_step[None], (T,) + k_step.shape)], axis=1)
-    v_all = jnp.concatenate(
-        [v_hist, jnp.broadcast_to(v_step[None], (T,) + v_step.shape)], axis=1)
-    t_pos = jnp.concatenate([t_hist, t_step], axis=1)           # (T, cap+T)
-    out = _attend_block(qt, k_all, v_all, positions[:, None], t_pos,
-                        causal=True, window=window, scale=scale,
-                        kv_heads=cfg.n_kv_heads)
+    if cache_spec is not None and cache_spec.use_pallas:
+        # gather-free read: each flattened token walks its OWN slot's table
+        # row in the kernel — the O(T * cap) pool[my_tables] HBM gather the
+        # jnp path below pays never materializes. The step's in-batch K/V
+        # rides along as extras with the (T, T) same-slot position mask.
+        out = _paged_attend_kernel(
+            qt, pool_k, pool_v, my_tables, start, positions[:, None],
+            k_step, v_step, t_step,
+            cache_spec=cache_spec, cfg=cfg, window=window)
+    else:
+        t_hist = jnp.arange(cap, dtype=jnp.int32)[None, :]      # (1, cap)
+        t_hist = jnp.where(t_hist < start[:, None], t_hist, _T_INVALID)
+        if quantized:
+            k_hist = mx.dequantize(MXCompressed(
+                pool_k.payload[my_tables].reshape(T, cap, -1),
+                pool_k.scales[my_tables].reshape(T, cap, -1)), mxs,
+                out_dtype=q.dtype)
+            v_hist = mx.dequantize(MXCompressed(
+                pool_v.payload[my_tables].reshape(T, cap, -1),
+                pool_v.scales[my_tables].reshape(T, cap, -1)), mxs,
+                out_dtype=q.dtype)
+        else:
+            k_hist = pool_k[my_tables].reshape(T, cap, -1).astype(q.dtype)
+            v_hist = pool_v[my_tables].reshape(T, cap, -1).astype(q.dtype)
+
+        k_all = jnp.concatenate(
+            [k_hist, jnp.broadcast_to(k_step[None], (T,) + k_step.shape)],
+            axis=1)
+        v_all = jnp.concatenate(
+            [v_hist, jnp.broadcast_to(v_step[None], (T,) + v_step.shape)],
+            axis=1)
+        t_pos = jnp.concatenate([t_hist, t_step], axis=1)       # (T, cap+T)
+        out = _attend_block(qt, k_all, v_all, positions[:, None], t_pos,
+                            causal=True, window=window, scale=scale,
+                            kv_heads=cfg.n_kv_heads)
     out = out[:, 0][None]                               # (1, T, H*hd)
 
     # append every real token's K/V into the pools; pads fall into the null

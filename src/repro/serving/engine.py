@@ -1054,6 +1054,13 @@ class Engine:
         aval = lambda x: sds(x.shape, x.dtype)
         state_in = jax.tree.map(aval, self._state)
         axis_sizes = dict(self.ctx.mesh.shape) if self.ctx.mesh else {}
+        # pool leaf avals + read-path mode for the pool-gather rule: on a
+        # use_pallas engine no step program may gather a pool at full
+        # capacity (the kernel streams blocks instead)
+        pool_avals = tuple(
+            (tuple(l.shape), str(l.dtype))
+            for key in ("pools_k", "pools_v")
+            for l in jax.tree_util.tree_leaves(self._state[key]))
         traces = {}
 
         def trace(name, fn, args, *, ctx, n_tokens, is_step,
@@ -1073,7 +1080,9 @@ class Engine:
                 logits_out=logits,
                 state_in=state_in if state_out is not None else None,
                 state_out=state_out,
-                retrace=lambda: jax.make_jaxpr(fn)(*args))
+                retrace=lambda: jax.make_jaxpr(fn)(*args),
+                pool_avals=pool_avals,
+                kernel_read_path=self.cache_spec.use_pallas)
 
         model, cache_spec = self.model, self.cache_spec
         tables = sds((self.n_slots, self.max_blocks), i32)

@@ -27,6 +27,17 @@ Rules (each owns a ``Finding.rule`` id; DESIGN.md §Static analysis):
 - ``retrace-mismatch`` — tracing the program twice yields the same jaxpr,
   a necessary condition for the compile-once contract (a value-dependent
   trace would fan out compiled variants at run time).
+- ``pool-gather`` — on a ``use_pallas`` engine, per-step programs must not
+  gather a KV pool at full capacity through HBM (``pool[tables]``): the
+  whole point of the gather-free kernel is that pool reads happen block-by
+  -block inside the ``pallas_call``. Any ``gather`` eqn whose operand aval
+  matches a pool leaf turns the audit red.
+
+Recursion covers ``pallas_call`` eqns too: their kernel jaxpr rides in
+``eqn.params`` like any other call primitive (``_sub_jaxprs`` is
+duck-typed), so a dense TP collective — or a pool gather — hidden inside a
+kernel body is inventoried exactly like one in the surrounding program.
+``tests/test_staticcheck.py`` pins this with mutation tests.
 
 ``audit_static_args`` is the jit-cache-key companion: it statically derives
 every ``jax.jit``/``functools.partial(jax.jit, ...)`` site's static-arg
@@ -225,6 +236,32 @@ def _check_host_transfer(trace: ProgramTrace, findings: List[Finding]) -> None:
                 f"a host round-trip per engine step"))
 
 
+def _check_pool_gather(trace: ProgramTrace, findings: List[Finding]) -> None:
+    """On a kernel-read engine, a per-step program must never gather a KV
+    pool operand — the full-capacity ``pool[tables]`` HBM materialization is
+    exactly what the block-table-walking kernel exists to remove. Pool avals
+    come from the engine state, so COW block copies (not step programs) and
+    table-array gathers (different avals) never false-positive."""
+    if not (trace.is_step and trace.kernel_read_path and trace.pool_avals):
+        return
+    pools = set(trace.pool_avals)
+    for eqn in iter_eqns(trace.jaxpr):
+        if eqn.primitive.name != "gather" or not eqn.invars:
+            continue
+        aval = getattr(eqn.invars[0], "aval", None)
+        if aval is None or not hasattr(aval, "shape"):
+            continue
+        sig = (tuple(aval.shape), str(aval.dtype))
+        if sig in pools:
+            findings.append(Finding(
+                "pool-gather", trace.name,
+                f"gather over a KV pool operand {sig} inside a per-step "
+                f"program — the use_pallas read path must stream pool "
+                f"blocks through the kernel, not materialize "
+                f"pool[tables] in HBM"))
+            return
+
+
 def _check_retrace(trace: ProgramTrace, findings: List[Finding]) -> None:
     if trace.retrace is None:
         return
@@ -246,6 +283,7 @@ def audit_program(trace: ProgramTrace) -> ProgramReport:
         _check_compressed_wire(trace, tp_records, findings)
     _check_dtype_drift(trace, findings)
     _check_host_transfer(trace, findings)
+    _check_pool_gather(trace, findings)
     _check_retrace(trace, findings)
     return ProgramReport(name=trace.name, collectives=tp_records,
                          findings=findings, compressed_expected=expected,

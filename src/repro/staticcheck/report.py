@@ -74,6 +74,11 @@ class ProgramTrace:
     state_in: Any = None
     state_out: Any = None
     retrace: Optional[Callable[[], Any]] = None  # re-derive jaxpr (determinism)
+    # (shape, dtype-str) of every KV pool leaf — the operands whose
+    # full-capacity gather the pool-gather rule hunts for
+    pool_avals: Tuple[Tuple[Tuple[int, ...], str], ...] = ()
+    kernel_read_path: bool = False      # cache_spec.use_pallas: reads must be
+                                        # gather-free (kernels/paged_attention)
 
 
 @dataclasses.dataclass

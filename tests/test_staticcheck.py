@@ -57,6 +57,7 @@ def _tp_engine(model, params, mesh, **kw):
 
 @pytest.mark.parametrize("cache_spec,token_budget", [
     (None, None), (None, 0), ("fp4_e2m1", None), ("fp4_e2m1", 0),
+    ("bf16+pallas", None), ("fp4_e2m1+pallas", None),
 ])
 def test_audit_green_on_engine_matrix(small_model, tp_mesh, cache_spec,
                                       token_budget):
@@ -198,6 +199,66 @@ def test_host_callback_in_step_program_is_red(small_model, monkeypatch):
     report = audit_engine(eng)
     assert any(f.rule == "host-transfer" and f.program == "mixed"
                for f in report.failures()), report.failures()
+
+
+def test_audit_recurses_into_pallas_call(tp_mesh):
+    """Satellite regression: a collective hidden INSIDE a pallas_call kernel
+    body is still inventoried — the kernel jaxpr rides in ``eqn.params`` and
+    ``_sub_jaxprs`` recurses into it like any other call primitive. Without
+    that recursion a dense TP collective could hide from the audit inside a
+    kernel."""
+    from jax.experimental import pallas as pl
+    from jax.sharding import PartitionSpec as P
+
+    from repro.staticcheck.jaxpr_audit import collect_collectives
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = jax.lax.psum(x_ref[...], "model")
+
+    def prog(x):
+        return compat.shard_map(
+            lambda xs: pl.pallas_call(
+                kernel,
+                out_shape=jax.ShapeDtypeStruct((4, 4), jnp.float32),
+                interpret=True)(xs),
+            mesh=tp_mesh, in_specs=P(), out_specs=P())(x)
+
+    jaxpr = jax.make_jaxpr(prog)(jnp.zeros((4, 4), jnp.float32))
+    recs = collect_collectives(jaxpr, {"model": 1})
+    assert any(r.primitive == "psum" and "model" in r.axes
+               for r in recs), recs
+
+
+def test_pool_gather_on_kernel_engine_is_red(small_model):
+    """Mutation for the pool-gather rule: flag a jnp-read engine's step
+    traces as kernel_read_path and the full-capacity pool[tables] gathers
+    they legitimately contain must turn the audit red — while the genuine
+    +pallas engine stays green under the same rule."""
+    _, model, params = small_model
+
+    def engine(spec):
+        return Engine(model, params, TPContext(mesh=None), max_slots=2,
+                      max_len=64, cache_dtype=jnp.float32, cache_spec=spec,
+                      prefill_chunk=8)
+
+    for name, trace in engine("fp4_e2m1+pallas").trace_programs().items():
+        rep = audit_program(trace)
+        assert not any(f.rule == "pool-gather" for f in rep.findings), (
+            name, rep.findings)
+
+    jnp_traces = engine("fp4_e2m1").trace_programs()
+    red = {}
+    for name, trace in jnp_traces.items():
+        trace.kernel_read_path = True                  # the mutation
+        red[name] = [f for f in audit_program(trace).findings
+                     if f.rule == "pool-gather"]
+    assert red["mixed"] and red["decode"], red
+    # off-step programs (insert/COW) are outside the rule's scope
+    traces = engine("fp4_e2m1").trace_programs(prompt_len=16)
+    t = traces["insert"]
+    t.kernel_read_path = True
+    assert not any(f.rule == "pool-gather"
+                   for f in audit_program(t).findings)
 
 
 def test_state_dtype_drift_is_red(small_model):
