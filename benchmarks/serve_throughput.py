@@ -44,6 +44,13 @@ automatic prefix caching off vs on, reporting cold vs warm TTFT, the
 prefill tokens skipped, and the hit rate — with token-match asserts (warm
 outputs identical to the uncached run) in each cache mode.
 
+With ``--chaos 1`` the run adds the fault-tolerance soak: the same Poisson
+traffic once fault-free and once under a deterministic ``--fault-plan``
+(allocator exhaustion, wire corruption, engine death, ...) with supervised
+recovery — asserting every request terminal, the block free list conserved,
+and every OK output token-identical to the fault-free reference; reporting
+goodput, TTFT-SLO attainment, and recovery latency.
+
   PYTHONPATH=src python benchmarks/serve_throughput.py
   PYTHONPATH=src python benchmarks/serve_throughput.py --requests 12 \
       --slots 4 --prompt-len 96 --new-tokens 24 --rate 20
@@ -69,7 +76,8 @@ from repro.core.policy import CompressionPolicy, NO_COMPRESSION
 from repro.launch.mesh import make_host_mesh
 from repro.launch.sharding import make_context
 from repro.models.model import Model
-from repro.serving import Engine, Request, paged_cache_bytes
+from repro.serving import (Engine, EngineSupervisor, FaultPlan, Request,
+                           OUTCOME_OK, TERMINAL_OUTCOMES, paged_cache_bytes)
 
 OUT_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "serve"
 
@@ -99,7 +107,7 @@ def run_policy(name, policy, model, params, mesh, args, *,
                     token_budget=token_budget)
     build = requests_fn or (lambda: build_requests(
         args.requests, args.prompt_len, args.new_tokens, args.rate,
-        model.cfg.vocab_size))
+        model.cfg.vocab_size, seed=args.seed))
     reqs = build()
     # warmup run compiles prefill bucket + decode step outside the timed run
     warm = [Request(prompt=reqs[0].prompt.copy(), max_new_tokens=2)]
@@ -442,7 +450,7 @@ def compare_prefix_cache(model, params, mesh, args):
     args = argparse.Namespace(**{**vars(args), "prompt_len": plen})
     mk = lambda: build_shared_prefix_requests(
         args.requests, shared, plen, args.new_tokens, args.rate,
-        model.cfg.vocab_size)
+        model.cfg.vocab_size, seed=args.seed)
     cache_modes = [("bf16", None)]
     if args.cache_spec and KVCacheSpec.parse(args.cache_spec).quantized:
         spec = KVCacheSpec.parse(args.cache_spec)
@@ -503,6 +511,111 @@ def compare_prefix_cache(model, params, mesh, args):
     return out
 
 
+def chaos_soak(model, params, mesh, args):
+    """Fault-tolerance soak: the SAME Poisson traffic served twice in each
+    requested cache mode — once fault-free (the reference) and once under a
+    deterministic ``FaultPlan`` (allocator exhaustion, wire-block
+    corruption, stuck steps, engine death) with an ``EngineSupervisor``
+    recovering and replaying unfinished requests.
+
+    Hard asserts (the chaos contract, docs/serving.md §Failure modes):
+    every request reaches a terminal outcome (no hangs, no losses); the
+    allocator conserves its free list (no leaked or still-held blocks);
+    every request that finished OK produced tokens IDENTICAL to the
+    fault-free reference — supervised recovery replays from host state and
+    greedy decoding is scheduling-independent, so a crash mid-decode is
+    invisible in the output. Reported per mode: outcome counts, goodput
+    (OK-request tokens over the soak makespan), TTFT-SLO attainment
+    (``--slo-ttft-ms``; with no SLO, the OK fraction), and recovery
+    latency/backoff per fault."""
+    plan_text = args.fault_plan or "exhaust@4x3;corrupt@8;die@12"
+    cache_modes = [("bf16", None)]
+    if args.cache_spec and KVCacheSpec.parse(args.cache_spec).quantized:
+        spec = KVCacheSpec.parse(args.cache_spec)
+        cache_modes.append((spec.mx.name, spec))
+    print(f"\n-- chaos soak: fault plan '{plan_text}', supervised recovery "
+          f"vs fault-free reference --")
+    out = []
+    for cname, cspec in cache_modes:
+        plan = FaultPlan.parse(plan_text, seed=args.seed)
+        mk = lambda: build_requests(args.requests, args.prompt_len,
+                                    args.new_tokens, args.rate,
+                                    model.cfg.vocab_size, seed=args.seed)
+        rec_ref, out_ref, _ = run_policy(
+            f"{cname}/reference", NO_COMPRESSION, model, params, mesh, args,
+            cache_spec=cspec, requests_fn=mk)
+        ctx = make_context(mesh, None, policy=NO_COMPRESSION)
+        # a stuck fault needs an armed watchdog to detect it; the timeout is
+        # generous so legitimate compile steps don't trip it spuriously
+        stuck = any(f.kind == "stuck" for f in plan.faults)
+        eng = Engine(model, params, ctx, max_slots=args.slots,
+                     max_len=args.prompt_len + args.new_tokens,
+                     block_size=args.block_size, cache_spec=cspec,
+                     deadline_s=args.deadline_ms / 1e3 or None,
+                     fault_plan=plan,
+                     step_timeout_s=1.0 if stuck else None)
+        reqs = mk()
+        # warmup with the plan disarmed so compile steps don't consume (or
+        # trip) the soak's fault events
+        eng.fault_plan = None
+        eng.run([Request(prompt=reqs[0].prompt.copy(), max_new_tokens=2)])
+        eng.fault_plan = plan
+        sup = EngineSupervisor(eng, backoff_s=0.01)
+        t0 = time.time()
+        sup.run(reqs)
+        wall = time.time() - t0
+        # every request reaches a terminal outcome: no hangs, no losses
+        for i, r in enumerate(reqs):
+            assert r.timing is not None and r.outcome in TERMINAL_OUTCOMES, (
+                f"[{cname}] request {i} not terminal after the soak")
+        # the soak returns every block: free list conserved, no held leak
+        assert eng.allocator.n_held == 0 and eng.allocator.n_allocated == 0, (
+            f"[{cname}] block leak: held={eng.allocator.n_held} "
+            f"allocated={eng.allocator.n_allocated}")
+        # OK requests are token-identical to the fault-free reference:
+        # recovery replays from host state, greedy decode is
+        # scheduling-independent, so the faults are invisible in the output
+        for i, r in enumerate(reqs):
+            if r.outcome == OUTCOME_OK:
+                assert np.array_equal(r.output, out_ref[i]), (
+                    f"[{cname}] request {i} diverged from the fault-free "
+                    f"reference after recovery")
+        s = sup.stats.summary()
+        rep = sup.report()
+        slo = args.slo_ttft_ms / 1e3
+        ok_ttfts = [t.ttft_s for t in sup.stats.timings
+                    if t.outcome == OUTCOME_OK]
+        slo_hit = (sum(1 for t in ok_ttfts if t <= slo) if slo > 0
+                   else len(ok_ttfts))
+        attainment = slo_hit / max(1, len(reqs))
+        print(f"  [{cname}] {len(reqs)} requests: {s['n_ok']} ok, "
+              f"{s['n_timed_out']} timed out, {s['n_cancelled']} cancelled, "
+              f"{s['n_rejected']} rejected; {rep['n_recoveries']} recoveries "
+              f"({rep['n_hard']} hard, {rep['n_warm']} warm: {rep['errors']}); "
+              f"goodput {s['goodput_tokens_per_s']:.1f} tok/s; "
+              f"SLO attainment {attainment:.2f}; "
+              f"ok outputs token-identical to reference")
+        out.append({
+            "cache_mode": cname,
+            "fault_plan": plan.describe(),
+            "wall_s": round(wall, 3),
+            "reference": rec_ref,
+            "outcomes": {"ok": s["n_ok"], "rejected": s["n_rejected"],
+                         "timed_out": s["n_timed_out"],
+                         "cancelled": s["n_cancelled"]},
+            "goodput_tokens_per_s": round(s["goodput_tokens_per_s"], 2),
+            "slo_ttft_ms": args.slo_ttft_ms,
+            "slo_attainment": round(attainment, 4),
+            "recoveries": {k: rep[k] for k in
+                           ("n_recoveries", "n_hard", "n_warm",
+                            "recovery_s_total", "backoff_s_total", "errors")},
+            "all_terminal": True,
+            "free_list_conserved": True,
+            "ok_token_match_vs_reference": 1.0,
+        })
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
@@ -545,6 +658,27 @@ def main():
                          "asserts (CPU runs the kernel in interpret mode)")
     ap.add_argument("--single-device", action="store_true",
                     help="skip the host mesh (no real collectives)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for the Poisson arrival process, synthetic "
+                         "prompts, and the chaos fault plan (recorded in "
+                         "the JSON report for reproducibility)")
+    ap.add_argument("--chaos", type=int, default=0,
+                    help="1: also run the fault-tolerance soak — the same "
+                         "traffic under a deterministic fault plan with "
+                         "supervised recovery, asserting every request "
+                         "terminal, free list conserved, and OK outputs "
+                         "token-identical to the fault-free reference")
+    ap.add_argument("--fault-plan", default="",
+                    help="chaos fault schedule (serving/faults.py grammar, "
+                         "e.g. 'exhaust@4x3;corrupt@8;die@12' — the "
+                         "default); implies nothing unless --chaos 1")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request total-latency deadline for the chaos "
+                         "soak (0 = none): late requests are recorded as "
+                         "timed_out, not crashed")
+    ap.add_argument("--slo-ttft-ms", type=float, default=0.0,
+                    help="TTFT SLO for the chaos soak's attainment metric "
+                         "(0 = report the OK fraction instead)")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(reduced_config(get_config(args.arch)),
@@ -565,7 +699,8 @@ def main():
                    model, params, mesh, args,
                    prefill_chunk=args.prefill_chunk)[0],
     ]
-    result = {"config": vars(args), "tp": tp, "records": records}
+    result = {"config": vars(args), "tp": tp, "seed": args.seed,
+              "records": records}
     if args.token_budget is not None:
         result["step_modes"] = compare_step_modes(model, params, mesh, args)
     if args.prefill_chunk is not None:
@@ -578,6 +713,8 @@ def main():
                                                       args)
     if args.kernel:
         result["kernel_modes"] = compare_kernel_modes(model, params, args)
+    if args.chaos:
+        result["chaos_soak"] = chaos_soak(model, params, mesh, args)
     OUT_DIR.mkdir(parents=True, exist_ok=True)
     out = OUT_DIR / "serve_throughput.json"
     out.write_text(json.dumps(result, indent=1))

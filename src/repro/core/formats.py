@@ -260,10 +260,14 @@ class KVCacheSpec:
                     return cls(mx=MXSpec.make(elem, int(block), scale),
                                use_pallas=use_pallas)
         raise ValueError(
-            f"unknown KV cache spec {spec!r}: expected 'bf16', an element "
-            f"format ({', '.join(sorted(ELEMENT_FORMATS))}), or a full MX "
-            f"spec name like 'fp4_e2m1_b32_e8m0', optionally with a "
-            f"'+pallas' suffix"
+            f"unknown KV cache spec {spec!r}: expected a dense alias "
+            f"(bf16, bfloat16, none, dense, fp32, float32), an element "
+            f"format ({', '.join(sorted(ELEMENT_FORMATS))} — block 32, "
+            f"e8m0 scales), or a full '<elem>_b<block>_<scale>' MX spec "
+            f"name like 'fp4_e2m1_b32_e8m0' with scale one of "
+            f"{', '.join(sorted(SCALE_FORMATS))}; any form may carry a "
+            f"'+pallas' suffix (gather-free Pallas read kernel), e.g. "
+            f"'fp4_e2m1+pallas'"
         )
 
     def describe(self) -> str:

@@ -26,6 +26,16 @@ scheduler for comparison).
 requests whose prompts share a prefix (system prompts, few-shot templates)
 map the shared KV blocks by reference instead of recomputing prefill —
 needs chunked prefill, i.e. a pure-attention arch.
+
+``--deadline-ms`` / ``--ttft-deadline-ms`` attach per-request SLOs: a
+request that misses its deadline is cancelled mid-decode (blocks released,
+partial output kept) and recorded as ``timed_out`` instead of crashing or
+hogging a slot (docs/serving.md §Failure modes).
+
+``--fault-plan`` injects deterministic faults ('exhaust@6x4;die@12' — see
+``serving/faults.py`` for the grammar) and wraps the run in an
+``EngineSupervisor`` that detects engine death / wire corruption / stuck
+steps, rebuilds the pools, and replays unfinished requests with backoff.
 """
 import argparse
 import time
@@ -40,7 +50,7 @@ from repro.launch.mesh import make_host_mesh
 from repro.launch.sharding import make_context
 from repro.models.frontends import audio_frames_stub, patch_embed_stub
 from repro.models.model import Model
-from repro.serving import Engine, Request
+from repro.serving import Engine, EngineSupervisor, FaultPlan, Request
 
 
 def main():
@@ -79,6 +89,26 @@ def main():
                          "bit-identical to the engine without the cache")
     ap.add_argument("--stagger", type=float, default=0.0,
                     help="inter-arrival gap in seconds (simulated traffic)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request total-latency deadline in ms (0 = "
+                         "none): a request still running past its deadline "
+                         "is cancelled mid-decode (blocks released, partial "
+                         "output kept) and recorded as timed_out")
+    ap.add_argument("--ttft-deadline-ms", type=float, default=0.0,
+                    help="per-request TTFT deadline in ms (0 = none): a "
+                         "request that has not produced its first token by "
+                         "the deadline is dropped as timed_out")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded admission: arrived-but-unadmitted requests "
+                         "beyond this are rejected (outcome 'rejected') "
+                         "instead of queueing unboundedly")
+    ap.add_argument("--fault-plan", default="",
+                    help="deterministic fault schedule, e.g. "
+                         "'exhaust@6x4;corrupt@9;die@12' (serving/faults.py "
+                         "grammar); wraps the run in an EngineSupervisor "
+                         "that recovers and replays unfinished requests")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for the synthetic workload and fault plan")
     ap.add_argument("--audit", action="store_true",
                     help="statically audit the engine's compiled programs "
                          "before serving (repro.staticcheck: compressed-wire "
@@ -101,11 +131,18 @@ def main():
     params = model.init_params(jax.random.PRNGKey(0))
     max_len = args.prompt_len + args.new_tokens + cfg.n_patches * (
         cfg.frontend == "vision")
+    fault_plan = FaultPlan.parse(args.fault_plan, seed=args.seed)
     engine = Engine(model, params, ctx, max_slots=args.slots, max_len=max_len,
                     block_size=args.block_size, cache_spec=args.cache_spec,
                     prefill_chunk=args.prefill_chunk,
                     token_budget=args.token_budget,
-                    prefix_cache=bool(args.prefix_cache))
+                    prefix_cache=bool(args.prefix_cache),
+                    max_queue=args.max_queue,
+                    deadline_s=args.deadline_ms / 1e3 or None,
+                    deadline_ttft_s=args.ttft_deadline_ms / 1e3 or None,
+                    fault_plan=fault_plan if len(fault_plan) else None)
+    if len(fault_plan):
+        print(f"fault plan: {fault_plan.describe()}")
     step = (f"mixed, {engine.token_budget}-token budget "
             f"({engine.prefill_chunk} tokens/chunk)" if engine.token_budget
             else (f"split, chunked {engine.prefill_chunk} tokens/step"
@@ -127,7 +164,7 @@ def main():
             raise SystemExit("static audit FAILED — not serving")
 
     n_req = args.requests or args.slots
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
     # with the prefix cache on, give the workload something to share: every
     # request opens with the same "system prompt" half (the common serving
     # shape the cache exists for), followed by a per-request suffix
@@ -150,13 +187,24 @@ def main():
     if cfg.encoder_decoder:
         extra["encoder_frames"] = audio_frames_stub(cfg, n_req, jax.random.PRNGKey(2))
     # warm up the prefill bucket + decode jits so the reported TTFT/latency
-    # measure serving, not XLA compilation
+    # measure serving, not XLA compilation — with the fault plan disarmed so
+    # warmup steps don't consume (or trip) the measured run's fault events
+    plan, engine.fault_plan = engine.fault_plan, None
     engine.run([Request(prompt=reqs[0].prompt.copy(), max_new_tokens=2)],
                extra_inputs={k: v[:1] for k, v in extra.items()} or None)
+    engine.fault_plan = plan
     t0 = time.time()
-    out = engine.run(reqs, extra_inputs=extra or None)
+    if len(fault_plan):
+        # supervised run: recoverable faults (engine death, corruption,
+        # stuck steps) restart the engine and replay unfinished requests
+        sup = EngineSupervisor(engine)
+        out = sup.run(reqs, extra_inputs=extra or None)
+        stats_src = sup.stats
+    else:
+        out = engine.run(reqs, extra_inputs=extra or None)
+        stats_src = engine.stats
     wall = time.time() - t0
-    s = engine.stats.summary()
+    s = stats_src.summary()
     print(f"{s['n_requests']} requests, {s['n_generated']} tokens in "
           f"{wall:.2f}s wall (incl compile); steady tokens/s={s['tokens_per_s']:.1f}")
     print(f"dispatch: {s['n_steps']} steps, {s['n_dispatches']} program "
@@ -169,6 +217,16 @@ def main():
           f"TPOT p50 {s['tpot_p50_s']*1e3:.2f} ms, p95 {s['tpot_p95_s']*1e3:.2f} ms; "
           f"latency p50 {s['latency_p50_s']*1e3:.1f} ms; "
           f"preemptions={s['n_preemptions']}")
+    print(f"outcomes: {s['n_ok']} ok, {s['n_rejected']} rejected, "
+          f"{s['n_timed_out']} timed out, {s['n_cancelled']} cancelled; "
+          f"goodput={s['goodput_tokens_per_s']:.1f} tok/s")
+    if len(fault_plan):
+        r = sup.report()
+        print(f"recoveries: {r['n_recoveries']} "
+              f"({r['n_hard']} hard, {r['n_warm']} warm) "
+              f"recovery {r['recovery_s_total']*1e3:.1f} ms "
+              f"+ backoff {r['backoff_s_total']*1e3:.1f} ms; "
+              f"errors={r['errors']}")
     stats = engine.measure_ttft(args.prompt_len, iters=4,
                                 extra_inputs=extra or None)
     print(f"prefill TTFT median {stats['median_s']*1e3:.2f} ms "

@@ -1,8 +1,15 @@
 from repro.serving.engine import Engine, Request
+from repro.serving.errors import (
+    OUTCOME_CANCELLED, OUTCOME_OK, OUTCOME_REJECTED, OUTCOME_TIMED_OUT,
+    TERMINAL_OUTCOMES, EngineDead, InvalidRequest, PoolExhausted,
+    ServingError, SlotExhausted, StepStuck, WireCorruption,
+)
+from repro.serving.faults import FAULT_KINDS, Fault, FaultPlan
 from repro.serving.kv_cache import (
     BlockAllocator, MixedBatch, PrefixIndex, build_mixed_batch, cache_bytes,
     cache_specs, check_cache_spec, init_paged_state, paged_cache_bytes,
 )
+from repro.serving.supervisor import RECOVERABLE, EngineSupervisor, RecoveryEvent
 from repro.serving.ttft import (
     HARDWARE, Hardware, RequestTiming, ServeStats, ttft_breakdown, ttft_seconds,
 )
@@ -13,4 +20,10 @@ __all__ = [
     "paged_cache_bytes", "MixedBatch", "build_mixed_batch",
     "HARDWARE", "Hardware", "RequestTiming", "ServeStats",
     "ttft_breakdown", "ttft_seconds",
+    "ServingError", "PoolExhausted", "SlotExhausted", "InvalidRequest",
+    "EngineDead", "StepStuck", "WireCorruption",
+    "OUTCOME_OK", "OUTCOME_REJECTED", "OUTCOME_TIMED_OUT",
+    "OUTCOME_CANCELLED", "TERMINAL_OUTCOMES",
+    "Fault", "FaultPlan", "FAULT_KINDS",
+    "EngineSupervisor", "RecoveryEvent", "RECOVERABLE",
 ]

@@ -54,6 +54,12 @@ from repro.core.policy import NO_COMPRESSION
 from repro.core.tp import TPContext, constrain
 from repro.models.attention import constrain_wire_pool, quantize_kv_pages
 from repro.models.model import Model
+from repro.serving.errors import (
+    OUTCOME_CANCELLED, OUTCOME_OK, OUTCOME_REJECTED, OUTCOME_TIMED_OUT,
+    EngineDead, InvalidRequest, PoolExhausted, SlotExhausted, StepStuck,
+    WireCorruption,
+)
+from repro.serving.faults import FaultPlan
 from repro.serving.kv_cache import (
     BlockAllocator, PrefixIndex, build_mixed_batch, check_cache_spec,
     init_paged_state, paged_cache_bytes,
@@ -65,16 +71,52 @@ __all__ = ["Request", "Engine"]
 
 @dataclasses.dataclass
 class Request:
-    prompt: np.ndarray            # int32 token ids
+    prompt: np.ndarray            # int32 token ids (validated non-empty)
     max_new_tokens: int = 16
     temperature: float = 0.0
     arrival_s: float = 0.0        # offset from run() start (staggered traffic)
     eos_id: Optional[int] = None  # stop early on this token
+    # per-request deadlines, measured from arrival (None = engine default;
+    # the engine's own None = no deadline). Expiry is a terminal OUTCOME
+    # (timing.outcome == "timed_out"), never an exception: the request
+    # leaves with whatever tokens it generated and its blocks are freed.
+    deadline_ttft_s: Optional[float] = None   # first token must land by this
+    deadline_s: Optional[float] = None        # last token must land by this
+    cancelled: bool = False       # set via cancel(); swept at the next step
     # filled by the engine:
     output: Optional[np.ndarray] = None
     ttft_s: Optional[float] = None
     latency_s: Optional[float] = None
     timing: Optional[RequestTiming] = None
+
+    def __post_init__(self) -> None:
+        if np.asarray(self.prompt).size == 0:
+            raise InvalidRequest(
+                "request prompt is empty — a request needs at least one "
+                "prompt token")
+        if self.max_new_tokens <= 0:
+            raise InvalidRequest(
+                f"max_new_tokens must be >= 1 (a request must generate at "
+                f"least one token), got {self.max_new_tokens}")
+        for name in ("deadline_ttft_s", "deadline_s"):
+            d = getattr(self, name)
+            if d is not None and d <= 0:
+                raise InvalidRequest(
+                    f"{name} must be > 0 seconds (measured from arrival), "
+                    f"got {d}")
+
+    def cancel(self) -> None:
+        """Mark for cancellation: the engine sweeps the flag at its next
+        step boundary, releases any KV blocks the request holds (mid-decode
+        included), and records outcome ``"cancelled"`` with whatever tokens
+        were already generated. Safe to call from another thread — the
+        flag is only ever flipped one way."""
+        self.cancelled = True
+
+    @property
+    def outcome(self) -> Optional[str]:
+        """Terminal outcome (``TERMINAL_OUTCOMES``), None while in flight."""
+        return self.timing.outcome if self.timing is not None else None
 
 
 @dataclasses.dataclass
@@ -150,10 +192,24 @@ class Engine:
       collectives compressed too (default off: decode payloads are small).
       The mixed step always runs under the prefill context: its collective
       payloads are budget-sized (chunk-scale), not one-token.
+    - robustness knobs (docs/serving.md §Failure modes & recovery):
+      ``max_queue`` (admission bound — overflow arrivals leave REJECTED),
+      ``deadline_ttft_s`` / ``deadline_s`` (engine-default deadlines;
+      expiry frees blocks mid-decode and records TIMED_OUT),
+      ``fault_plan`` (deterministic fault injection, serving/faults.py),
+      ``step_timeout_s`` / ``stall_limit`` (step watchdog + stall guard,
+      both raising ``StepStuck``), and ``max_preempts_per_step`` /
+      ``thrash_window`` / ``thrash_limit`` (eviction-storm guard: bounded
+      preemptions per step, with sustained thrash degrading the engine to
+      one chunk per step and no admissions until a retire).
 
     ``run(requests)`` serves a list of ``Request``s and fills their
-    ``output``/``ttft_s``/``latency_s``/``timing``; per-run aggregates land
-    in ``self.stats`` (``ServeStats``).
+    ``output``/``ttft_s``/``latency_s``/``timing`` (``timing.outcome`` is
+    the terminal outcome); per-run aggregates land in ``self.stats``
+    (``ServeStats``). A run aborted by ``EngineDead`` / ``StepStuck`` /
+    ``WireCorruption`` is resumable: ``recover()`` (or the
+    ``EngineSupervisor``) restores a runnable engine and unfinished
+    requests replay from host-side state.
     """
 
     PREFILL_FN_CACHE_MAX = 8  # LRU bound on whole-prompt prefill programs
@@ -168,11 +224,24 @@ class Engine:
                  token_budget: Optional[int] = None,
                  prefix_cache: bool = False,
                  persistent_cache: bool = False,
-                 donate_cache: bool = True):
+                 donate_cache: bool = True,
+                 max_queue: Optional[int] = None,
+                 deadline_ttft_s: Optional[float] = None,
+                 deadline_s: Optional[float] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 step_timeout_s: Optional[float] = None,
+                 stall_limit: int = 256,
+                 max_preempts_per_step: Optional[int] = None,
+                 thrash_window: int = 8,
+                 thrash_limit: Optional[int] = None):
         self.model = model
         self.cfg = model.cfg
         self.ctx = ctx
         self.params = params
+        if max_slots is not None and max_slots <= 0:
+            raise SlotExhausted(
+                f"max_slots must be >= 1 (every request needs a decode "
+                f"slot), got {max_slots}")
         self.n_slots = max_slots or batch_size or 4
         self.batch_size = self.n_slots  # back-compat alias
         self.max_len = max_len
@@ -187,6 +256,46 @@ class Engine:
         # §Quantized cache). Accepts a KVCacheSpec or a CLI string.
         self.cache_spec = check_cache_spec(self.cfg, cache_spec)
         self.stats = ServeStats()
+
+        # ---- robustness knobs (docs/serving.md §Failure modes & recovery).
+        # All host-side: none change compiled shapes; degradation packs
+        # fewer REAL tokens into the same fixed-shape step program.
+        # bounded admission: arrived-but-never-admitted requests beyond this
+        # leave as REJECTED (preempted requeues are exempt — they were
+        # already accepted); None = unbounded
+        if max_queue is not None and max_queue < 0:
+            raise ValueError("max_queue must be >= 0 (None = unbounded)")
+        self.max_queue = max_queue
+        # engine-default deadlines; per-request fields override
+        self.deadline_ttft_s = deadline_ttft_s
+        self.deadline_s = deadline_s
+        # deterministic fault injection (serving/faults.py)
+        self.fault_plan = fault_plan
+        # step watchdog: a single step's wall time past this raises
+        # StepStuck (checked post-hoc at the step boundary — stands in for
+        # the async watchdog thread a live server would run); the stall
+        # guard raises it when the scheduler makes zero token progress for
+        # stall_limit consecutive steps with requests in flight (0 = off).
+        # Fault-held pool pressure is exempt: it resolves on schedule.
+        self.step_timeout_s = step_timeout_s
+        self.stall_limit = int(stall_limit)
+        # eviction-storm guard: chunk allocation stops choosing new victims
+        # once a step has preempted this many slots (chunks defer in place;
+        # decode growth still preempts for correctness but counts), and
+        # when a rolling window of steps preempts more than thrash_limit
+        # the engine DEGRADES — no new admissions, one prefill chunk per
+        # step — until a request retires and clears it.
+        self.max_preempts_per_step = (max_preempts_per_step
+                                      if max_preempts_per_step is not None
+                                      else 2 * self.n_slots)
+        self.thrash_window = int(thrash_window)
+        self.thrash_limit = (thrash_limit if thrash_limit is not None
+                             else 4 * self.n_slots)
+        # non-finite logits watch (WireCorruption detection) costs one tiny
+        # program + a device->host read per step: on only under a fault plan
+        # that can corrupt pool bytes
+        self._nan_watch = fault_plan is not None and any(
+            f.kind == "corrupt" for f in fault_plan.faults)
 
         # right-padding to a bucket is only sound when every layer is
         # attention (causal masking hides trailing pads); recurrent layers
@@ -341,6 +450,17 @@ class Engine:
         if self.prefix_cache:
             self._cow_fn = jax.jit(
                 self._cow_impl, donate_argnums=(0,) if donate_cache else ())
+        # fault-injection corruption (built only under a corrupting plan):
+        # poison one pool block's bytes; _check_finite's watch detects it at
+        # the sampling boundary and raises WireCorruption
+        self._corrupt_fn = None
+        self._finite_fn = None
+        if self._nan_watch:
+            self._corrupt_fn = jax.jit(
+                self._corrupt_impl,
+                donate_argnums=(0,) if donate_cache else ())
+            self._finite_fn = jax.jit(
+                lambda lg: jnp.isfinite(lg).all(axis=-1))
         self._reset()
 
     # ------------------------------------------------------------- state mgmt
@@ -366,6 +486,15 @@ class Engine:
         self._cur = np.zeros((self.n_slots,), np.int32)
         self._running: Dict[int, _Work] = {}
         self._waiting: List[_Work] = []
+        # robustness bookkeeping (per run): step counter, fault-hold expiry,
+        # stall/thrash guards (docs/serving.md §Failure modes & recovery)
+        self._step_i = 0
+        self._stall = 0
+        self._hold_until = 0         # step at which fault-held blocks return
+        self._step_preempts = 0
+        self._preempt_window: collections.deque = collections.deque(
+            maxlen=max(1, self.thrash_window))
+        self._degraded = False
 
     def decode_cache_size(self) -> int:
         """Compiled-variant count of the program that advances decode (jit-
@@ -510,6 +639,40 @@ class Engine:
                 "pools_k": [copy1(p) for p in state["pools_k"]],
                 "pools_v": [copy1(p) for p in state["pools_v"]]}
 
+    def _corrupt_impl(self, state, block):
+        """Fault injection: poison block ``block`` in every attention
+        layer's K/V pool. Wire pools get their e8m0 scale bytes maxed
+        (255 -> 2^128, so dequant overflows to inf/NaN); dense pools get
+        NaN directly. Same constrain discipline as the other pool
+        producers, so the corrupted state re-enters the step programs
+        without a recompile."""
+        a = self.ctx.axis if self.ctx.tp else None
+        poison1 = lambda p: (
+            constrain_wire_pool(self.ctx, MXCompressed(
+                payload=p.payload,
+                scales=p.scales.at[block].set(jnp.uint8(255))))
+            if self.cache_spec.quantized
+            else constrain(self.ctx, p.at[block].set(jnp.nan), None, None, a))
+        return {**state,
+                "pools_k": [poison1(p) for p in state["pools_k"]],
+                "pools_v": [poison1(p) for p in state["pools_v"]]}
+
+    def _check_finite(self, logits, rows: List[int]) -> None:
+        """WireCorruption watch: raise if any row about to contribute a
+        sampled token carries non-finite logits — poisoned pool bytes
+        reached the sampling boundary. Runs BEFORE host state absorbs the
+        step's tokens, so a supervisor replay starts from clean outputs.
+        Enabled only under a corrupting fault plan (``_nan_watch``)."""
+        if not self._nan_watch or not rows:
+            return
+        finite = np.asarray(self._finite_fn(logits))
+        bad = [r for r in rows if not finite[r]]
+        if bad:
+            raise WireCorruption(
+                f"non-finite logits at sampling row(s) {bad} (step "
+                f"{self._step_i}) — a corrupted KV pool block reached the "
+                f"sampling boundary; pools must be rebuilt (hard recovery)")
+
     # ------------------------------------------------------------- sampling
 
     @staticmethod
@@ -529,6 +692,12 @@ class Engine:
         return None
 
     def _admit_ready(self, now: float) -> None:
+        if self._degraded and self._running:
+            # thrash degradation: stop feeding the storm — no admissions
+            # until a retire clears the flag (admitting with nothing
+            # running is always allowed, so degradation can never deadlock
+            # an empty engine)
+            return
         while self._waiting and self._waiting[0].arrival <= now:
             slot = self._free_slot()
             if slot is None:
@@ -545,7 +714,9 @@ class Engine:
             ids = self.allocator.alloc(nb)
             if ids is None:
                 if not self._running:
-                    raise RuntimeError(
+                    if self.allocator.n_held:
+                        return  # synthetic (fault-held) pressure: wait it out
+                    raise PoolExhausted(
                         f"prefill needs {nb} KV blocks; only "
                         f"{self.allocator.n_free} free and nothing to evict — "
                         f"pool too small for this request")
@@ -646,13 +817,15 @@ class Engine:
             victim = max(self._running,
                          key=lambda s: (self._running[s].arrival, s))
             if victim == slot:
-                if len(self._running) == 1:
-                    raise RuntimeError(
+                if len(self._running) == 1 and not self.allocator.n_held:
+                    raise PoolExhausted(
                         f"prefill chunk needs {need - len(w.blocks)} KV "
                         f"blocks; only {self.allocator.n_available} "
                         f"available and nothing to evict — pool too small "
                         f"for this request")
                 return False
+            if self._step_preempts >= self.max_preempts_per_step:
+                return False  # storm guard: defer instead of another victim
             self._preempt(victim)
 
     def _advance_prefill(self, slot: int, w: _Work, n_valid: int) -> None:
@@ -706,6 +879,7 @@ class Engine:
         if w.pos >= L:
             # final chunk: its logits (read at the last real token) yield the
             # request's first sampled token, ending PREFILLING
+            self._check_finite(logits, [0])
             self._key, sub = jax.random.split(self._key)
             temp = jnp.full((1,), w.req.temperature, jnp.float32)
             tok = int(np.asarray(self._sample(logits, temp, sub))[0])
@@ -749,12 +923,19 @@ class Engine:
                 continue
             segs.append((slot, w.prompt[w.pos:w.pos + n], w.pos))
             budget -= n
+            if self._degraded:
+                # thrash degradation: one chunk per step (the split-
+                # scheduler rate) until a retire clears the storm — fewer
+                # REAL tokens in the same fixed-shape program, so no
+                # recompile
+                break
         return segs
 
-    def _step_mixed(self) -> None:
+    def _step_mixed(self) -> int:
         """One unified engine step: pack prefill chunks + the decode batch
         into a single flattened token-budget program dispatch, then sample
-        every slot that produced a token this step."""
+        every slot that produced a token this step. Returns the number of
+        real tokens processed (0: every slot deferred)."""
         self._grow_or_evict()
         decoding = sorted(s for s, w in self._running.items()
                           if not w.prefilling)
@@ -765,7 +946,7 @@ class Engine:
         # eviction during packing may have preempted decode slots
         decoding = [s for s in decoding if s in self._running]
         if not segs and not decoding:
-            return  # every prefilling slot deferred; decodes will free blocks
+            return 0  # every prefilling slot deferred; decodes free blocks
         batch = build_mixed_batch(
             segs, [(s, int(self._cur[s]), int(self._lengths[s]))
                    for s in decoding],
@@ -788,6 +969,12 @@ class Engine:
             self._lengths[slot] += 1
             temps[slot] = self._running[slot].req.temperature
         self._key, sub = jax.random.split(self._key)
+        # corruption watch runs before ANY host state absorbs this step's
+        # tokens, so a supervisor replay never sees poisoned output
+        self._check_finite(logits, decoding + [
+            slot for slot, chunk, _ in segs
+            if self._running[slot].pos + len(chunk)
+            >= len(self._running[slot].prompt)])
         toks = np.asarray(self._sample(logits, jnp.asarray(temps), sub))
         now = time.perf_counter() - self._t0
 
@@ -805,6 +992,7 @@ class Engine:
             self._cur[slot] = tok
             if w.done:
                 self._retire(slot, now)
+        return batch.n_prefill + batch.n_decode
 
     def _admit(self, w: _Work, slot: int, ids: List[int]) -> None:
         _, prefill, insert, total, nb = self._prefill_for(len(w.prompt))
@@ -818,6 +1006,7 @@ class Engine:
         logits, cache = prefill(self.params, batch, last_index)
         # whole-prompt prefill + insert, processing the prompt off-step
         self.stats.record_dispatch(2, prefill_tokens=L)
+        self._check_finite(logits, [0])
         self._key, sub = jax.random.split(self._key)
         temp = jnp.full((1,), w.req.temperature, jnp.float32)
         tok = int(np.asarray(self._sample(logits, temp, sub))[0])
@@ -850,10 +1039,17 @@ class Engine:
                 if got is None:
                     victim = max(self._running,
                                  key=lambda s: (self._running[s].arrival, s))
-                    if victim == slot and len(self._running) == 1:
-                        raise RuntimeError(
+                    if (victim == slot and len(self._running) == 1
+                            and not self.allocator.n_held):
+                        raise PoolExhausted(
                             "KV pool exhausted with a single request in "
                             "flight — n_blocks too small for prompt+decode")
+                    # under fault-held pressure the sole request self-
+                    # preempts instead: it requeues, the hold expires on
+                    # schedule, and readmission recomputes. Decode slots
+                    # cannot defer in place (the next write needs a real
+                    # block), so growth preemption ignores the per-step
+                    # budget — the thrash window still counts it.
                     self._preempt(victim)
                     if victim == slot:
                         break
@@ -876,6 +1072,7 @@ class Engine:
             [np.asarray(w.req.prompt, np.int32),
              np.asarray(w.tokens, np.int32)])
         w.preemptions += 1
+        self._step_preempts += 1
         bisect.insort(self._waiting, w, key=lambda x: x.arrival)
 
     def _clear_slot(self, slot: int) -> None:
@@ -884,22 +1081,155 @@ class Engine:
         self._cur[slot] = 0
 
     def _retire(self, slot: int, now: float) -> None:
+        self._finish(slot, OUTCOME_OK, now)
+
+    def _finish(self, slot: int, outcome: str, now: float) -> None:
+        """Terminal exit for a RUNNING slot, for any outcome: release the
+        slot's blocks (mid-decode cancellation/timeout included — shared
+        prefix blocks survive in the index for other requests), clear the
+        host tables, and record the timing. An ``ok`` retire also clears
+        thrash degradation: a completed request IS forward progress."""
         w = self._running.pop(slot)
         self.allocator.release(w.blocks)
         w.blocks = []
         self._clear_slot(slot)
+        self._record_terminal(w, outcome, now)
+        if outcome == OUTCOME_OK:
+            self._degraded = False
+
+    def _record_terminal(self, w: _Work, outcome: str, now: float) -> None:
+        """Fill the request's output/timing at its terminal outcome.
+        Degraded outcomes keep whatever tokens were generated (partial
+        output) — callers must already have released any blocks."""
         r = w.req
-        r.output = np.asarray(w.tokens[: r.max_new_tokens], np.int32)
+        gen = w.tokens[: r.max_new_tokens]
+        r.output = np.asarray(gen, np.int32)
         r.timing = RequestTiming(
             arrival_s=w.arrival, admitted_s=w.admitted_t,
             first_token_s=w.first_token_t, finished_s=now,
-            n_prompt=len(np.asarray(r.prompt)), n_generated=len(w.tokens),
+            n_prompt=len(np.asarray(r.prompt)), n_generated=len(gen),
             n_preemptions=w.preemptions, n_cached_prompt=w.cached_tokens,
             inter_token_s=[b - a for a, b in zip(w.token_times,
-                                                 w.token_times[1:])])
-        r.ttft_s = r.timing.ttft_s
+                                                 w.token_times[1:])],
+            outcome=outcome)
+        r.ttft_s = (r.timing.ttft_s if w.first_token_t is not None else None)
         r.latency_s = r.timing.latency_s
         self.stats.record(r.timing)
+
+    def _expired(self, w: _Work, now: float) -> Optional[str]:
+        """The terminal outcome ``w`` should leave with right now, or None.
+        Cancellation wins over deadlines; deadlines measure from arrival
+        (engine defaults unless the request overrides), and the TTFT
+        deadline stops applying once a first token exists."""
+        if w.req.cancelled:
+            return OUTCOME_CANCELLED
+        if w.arrival > now:
+            return None  # not in the system yet
+        d = (w.req.deadline_s if w.req.deadline_s is not None
+             else self.deadline_s)
+        if d is not None and now - w.arrival >= d and not w.done:
+            return OUTCOME_TIMED_OUT
+        dt = (w.req.deadline_ttft_s if w.req.deadline_ttft_s is not None
+              else self.deadline_ttft_s)
+        if (dt is not None and w.first_token_t is None
+                and now - w.arrival >= dt):
+            return OUTCOME_TIMED_OUT
+        return None
+
+    def _sweep_terminal(self, now: float) -> None:
+        """Once per loop iteration, before admission: move every cancelled /
+        deadline-expired request (waiting or running) to its terminal
+        outcome."""
+        kept: List[_Work] = []
+        for w in self._waiting:  # filtering keeps arrival order (sorted)
+            oc = self._expired(w, now)
+            if oc is None:
+                kept.append(w)
+            else:
+                self._record_terminal(w, oc, now)
+        self._waiting = kept
+        for slot in list(self._running):
+            oc = self._expired(self._running[slot], now)
+            if oc is not None:
+                self._finish(slot, oc, now)
+
+    def _bound_queue(self, now: float) -> None:
+        """Admission backpressure, enforced AFTER admission has filled every
+        free slot: arrived requests that were never admitted, beyond the
+        newest ``max_queue`` the queue can absorb, leave as REJECTED.
+        Preempted requeues were already accepted and are exempt — they
+        re-enter a slot or time out, never reject."""
+        if self.max_queue is None:
+            return
+        arrived = [w for w in self._waiting
+                   if w.arrival <= now and w.admitted_t is None]
+        drop = arrived[self.max_queue:]
+        if drop:
+            ids = {id(w) for w in drop}
+            self._waiting = [w for w in self._waiting if id(w) not in ids]
+            for w in drop:
+                self._record_terminal(w, OUTCOME_REJECTED, now)
+
+    # ------------------------------------------------------ faults & recovery
+
+    def _apply_faults(self) -> None:
+        """Fire the fault plan's events due at this step (serving/faults.py
+        documents the kinds) and expire previous holds. Host-side only: the
+        one device-touching fault is delegated to ``_corrupt_block``."""
+        if self._hold_until and self._step_i >= self._hold_until:
+            self.allocator.unhold()
+            self._hold_until = 0
+        for f in self.fault_plan.take(self._step_i):
+            if f.kind == "exhaust":
+                self.allocator.hold(f.n_blocks)
+                self._hold_until = max(self._hold_until,
+                                       self._step_i + f.duration)
+            elif f.kind == "corrupt":
+                self._corrupt_block(f.block)
+            elif f.kind == "slow":
+                time.sleep(f.sleep_s)
+            elif f.kind == "stuck":
+                time.sleep(max(f.sleep_s,
+                               2.0 * (self.step_timeout_s or 0.05)))
+            elif f.kind == "die":
+                raise EngineDead(
+                    f"fault injection: engine died at step {self._step_i} "
+                    f"with {len(self._running)} in-flight and "
+                    f"{len(self._waiting)} queued request(s)")
+
+    def _corrupt_block(self, block: int) -> None:
+        """Poison one live pool block (the lowest live block when ``block``
+        is -1; silently a no-op when nothing is live — there is nothing to
+        corrupt)."""
+        live = sorted(b for w in self._running.values() for b in w.blocks)
+        if block < 0:
+            if not live:
+                return
+            block = live[0]
+        self._state = self._corrupt_fn(self._state, jnp.int32(block))
+
+    def recover(self, *, hard: bool = True) -> None:
+        """Restore the engine to a runnable state after ``run`` aborted with
+        ``EngineDead`` / ``StepStuck`` / ``WireCorruption`` (the
+        ``EngineSupervisor`` calls this between attempts).
+
+        ``hard=True`` (required for EngineDead/WireCorruption — device
+        pools are lost or poisoned): discard everything; the next ``run()``
+        rebuilds pools, allocator, and prefix index from scratch.
+        ``hard=False`` (StepStuck on a ``persistent_cache`` engine — pools
+        are healthy): release the in-flight requests' blocks and keep the
+        pools and prefix index warm, so replayed requests re-hit their
+        cached prefixes."""
+        if hard or not self.persistent_cache:
+            self._ran = False        # next run() takes the full _reset path
+            self._soft_reset()
+            return
+        for slot in list(self._running):
+            w = self._running.pop(slot)
+            self.allocator.release(w.blocks)
+            w.blocks = []
+        self.allocator.unhold()      # expire any fault holds mid-flight
+        self._soft_reset()
 
     def _decode_once(self) -> int:
         """One batched decode step over every DECODING slot. PREFILLING slots
@@ -916,6 +1246,7 @@ class Engine:
         for slot, w in active:
             self._lengths[slot] += 1
             temps[slot] = w.req.temperature
+        self._check_finite(logits, [s for s, _ in active])
         self._key, sub = jax.random.split(self._key)
         toks = np.asarray(self._sample(logits, jnp.asarray(temps), sub))
         now = time.perf_counter() - self._t0
@@ -958,7 +1289,7 @@ class Engine:
         for i, r in enumerate(requests):
             need = self._n_prefix + len(np.asarray(r.prompt)) + r.max_new_tokens - 1
             if need > capacity:
-                raise ValueError(
+                raise InvalidRequest(
                     f"request {i}: prompt+decode needs {need} cache positions "
                     f"but max_len={self.max_len} provides {capacity}")
             extra = {k: jnp.asarray(v[i:i + 1])
@@ -967,31 +1298,78 @@ class Engine:
                                extra=extra, arrival=float(r.arrival_s)))
         self._waiting = sorted(works, key=lambda w: w.arrival)
 
-        while self._waiting or self._running:
-            now = time.perf_counter() - self._t0
-            self._admit_ready(now)
-            if not self._running:
-                if self._waiting:
-                    time.sleep(min(max(self._waiting[0].arrival - now, 0.0),
-                                   0.005))
-                continue
-            if self.token_budget:
-                # unified step: packed prefill chunks + the decode batch in
-                # ONE program dispatch (DESIGN.md §Mixed step)
-                self._step_mixed()
-                continue
-            # split scheduler: (at most) one prefill chunk, then a batched
-            # decode for every live DECODING slot — kills head-of-line
-            # blocking like the mixed step, at two dispatches per step
-            n_pref = self._prefill_step() if self.prefill_chunk else 0
-            self._grow_or_evict()
-            n_dec = 0
-            if any(not w.prefilling for w in self._running.values()):
-                n_dec = self._decode_once()
-            self.stats.record_step(
-                n_pref, n_dec,
-                n_dispatches=(1 if n_pref else 0) + (1 if n_dec else 0))
+        try:
+            while self._waiting or self._running:
+                now = time.perf_counter() - self._t0
+                self._sweep_terminal(now)
+                self._admit_ready(now)
+                self._bound_queue(now)
+                if not self._running:
+                    if self._waiting:
+                        time.sleep(min(max(self._waiting[0].arrival - now,
+                                           0.0), 0.005))
+                    continue
+                self._step_i += 1
+                self._step_preempts = 0
+                t_step = time.perf_counter()
+                if self.fault_plan is not None:
+                    self._apply_faults()
+                if self.token_budget:
+                    # unified step: packed prefill chunks + the decode batch
+                    # in ONE program dispatch (DESIGN.md §Mixed step)
+                    n_tok = self._step_mixed()
+                else:
+                    # split scheduler: (at most) one prefill chunk, then a
+                    # batched decode for every live DECODING slot — kills
+                    # head-of-line blocking like the mixed step, at two
+                    # dispatches per step
+                    n_pref = self._prefill_step() if self.prefill_chunk else 0
+                    self._grow_or_evict()
+                    n_dec = 0
+                    if any(not w.prefilling
+                           for w in self._running.values()):
+                        n_dec = self._decode_once()
+                    self.stats.record_step(
+                        n_pref, n_dec,
+                        n_dispatches=(1 if n_pref else 0)
+                        + (1 if n_dec else 0))
+                    n_tok = n_pref + n_dec
+                self._guard_step(n_tok, time.perf_counter() - t_step)
+        finally:
+            # fault holds never outlive a run: whether it completed, timed
+            # every request out, or is about to be supervised through a
+            # recovery, the free list must conserve the pool
+            if self.allocator.n_held:
+                self.allocator.unhold()
+                self._hold_until = 0
         return requests
+
+    def _guard_step(self, n_tok: int, elapsed_s: float) -> None:
+        """Post-step robustness checks: the step watchdog (wall time past
+        ``step_timeout_s`` raises StepStuck — a post-hoc stand-in for the
+        async watchdog thread a live server would run), the stall guard
+        (``stall_limit`` consecutive zero-token steps with requests in
+        flight raises StepStuck; fault-held pool pressure is exempt since
+        it expires on schedule), and the thrash detector (preemptions over
+        the rolling window past ``thrash_limit`` set degraded mode)."""
+        if self.step_timeout_s is not None and elapsed_s > self.step_timeout_s:
+            raise StepStuck(
+                f"engine step {self._step_i} took {elapsed_s:.3f}s "
+                f"(step_timeout_s={self.step_timeout_s}); treating the "
+                f"step loop as wedged")
+        if n_tok > 0:
+            self._stall = 0
+        elif not self.allocator.n_held:
+            self._stall += 1
+            if self.stall_limit and self._stall >= self.stall_limit:
+                raise StepStuck(
+                    f"no token progress for {self._stall} consecutive "
+                    f"steps with {len(self._running)} slot(s) in flight — "
+                    f"scheduler livelock")
+        self._preempt_window.append(self._step_preempts)
+        if (not self._degraded
+                and sum(self._preempt_window) >= self.thrash_limit):
+            self._degraded = True
 
     def measure_ttft(self, prompt_len: int, *, iters: int = 8,
                      extra_inputs: Optional[Dict] = None) -> Dict[str, float]:

@@ -1,0 +1,88 @@
+"""Typed serving errors and terminal request outcomes.
+
+The engine distinguishes three failure surfaces:
+
+* **Per-request impossibility** — a request that can never be served by this
+  engine configuration (``InvalidRequest``) or a pool that cannot cover it
+  even with every other request evicted (``PoolExhausted``). These raise at
+  the point of discovery; ``PoolExhausted``/``SlotExhausted`` subclass
+  ``RuntimeError`` so callers written against the old bare raises keep
+  working.
+* **Per-request degradation** — deadlines, admission backpressure, and
+  cancellation never raise at all: the request leaves the system with an
+  explicit terminal ``outcome`` (``REJECTED`` / ``TIMED_OUT`` /
+  ``CANCELLED``) recorded in its ``RequestTiming`` and aggregated by
+  ``ServeStats``. Degradation is a first-class serving mode, not an
+  exception path.
+* **Engine-level faults** — a poisoned device state (``WireCorruption``,
+  detected by the non-finite logits watch), a wedged step loop
+  (``StepStuck``, raised by the step watchdog), or a simulated/real crash
+  (``EngineDead``). These abort ``Engine.run`` and are the recovery surface
+  of ``EngineSupervisor`` (serving/supervisor.py), which rebuilds state and
+  replays the in-flight requests.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "ServingError", "PoolExhausted", "SlotExhausted", "InvalidRequest",
+    "EngineDead", "StepStuck", "WireCorruption",
+    "OUTCOME_OK", "OUTCOME_REJECTED", "OUTCOME_TIMED_OUT",
+    "OUTCOME_CANCELLED", "TERMINAL_OUTCOMES",
+]
+
+
+class ServingError(RuntimeError):
+    """Base of every typed serving-stack error (subclasses ``RuntimeError``
+    so pre-typed callers that caught the bare raises keep working)."""
+
+
+class PoolExhausted(ServingError):
+    """The KV block pool cannot cover a request even with nothing left to
+    evict — the pool is too small for the request, not merely busy.
+    Transient pressure (other requests holding blocks, fault-injected
+    holds) never raises this: the slot defers and retries instead."""
+
+
+class SlotExhausted(ServingError):
+    """No decode slot can ever become available for a request (engine
+    misconfiguration, e.g. ``max_slots=0`` traffic). Ordinary slot
+    contention queues FIFO and never raises."""
+
+
+class InvalidRequest(ServingError, ValueError):
+    """A request rejected at validation: empty prompt, non-positive
+    ``max_new_tokens``, non-positive deadline, or a prompt+decode footprint
+    beyond the engine's ``max_len`` capacity. Subclasses ``ValueError`` for
+    callers that treated validation failures as value errors."""
+
+
+class EngineDead(ServingError):
+    """The engine process/state is gone mid-run (fault-injected via
+    ``FaultPlan`` ``die`` events, or a real crash surfaced by a wrapper).
+    Device pools must be treated as lost: recovery is a hard reset."""
+
+
+class StepStuck(ServingError):
+    """The step watchdog tripped: one engine step exceeded
+    ``step_timeout_s``, or the scheduler made no token progress for
+    ``stall_limit`` consecutive steps. Host-side request state is intact
+    and device pools are assumed healthy: recovery can be warm."""
+
+
+class WireCorruption(ServingError):
+    """Non-finite values reached the sampling boundary — the signature of a
+    corrupted KV pool block (fault-injected or a real HBM/wire fault).
+    Pools are poisoned: recovery is a hard reset."""
+
+
+# Terminal request outcomes recorded in ``RequestTiming.outcome``. State
+# machine: WAITING -> {REJECTED, TIMED_OUT, CANCELLED} and
+# WAITING -> RUNNING -> {OK, TIMED_OUT, CANCELLED}; docs/serving.md
+# §Failure modes & recovery draws the full diagram.
+OUTCOME_OK = "ok"                   # retired normally (max_new_tokens / eos)
+OUTCOME_REJECTED = "rejected"       # never admitted: bounded-queue overflow
+OUTCOME_TIMED_OUT = "timed_out"     # TTFT or total-latency deadline expired
+OUTCOME_CANCELLED = "cancelled"     # explicit cancel, or engine-forced abort
+
+TERMINAL_OUTCOMES = (OUTCOME_OK, OUTCOME_REJECTED, OUTCOME_TIMED_OUT,
+                     OUTCOME_CANCELLED)

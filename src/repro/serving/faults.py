@@ -1,0 +1,177 @@
+"""Deterministic fault injection for the serving engine.
+
+A ``FaultPlan`` is a seedable, step-indexed schedule of fault events the
+engine consults at the top of every scheduler step. The plan itself is pure
+host-side state (numpy + stdlib only — the staticcheck SC002 host zone
+covers this module): it *decides* what fails and when; the engine *applies*
+the decision (the one device-touching fault, wire-block corruption, lives
+in ``Engine._corrupt_block``, outside the host zone).
+
+Fault kinds (``Fault.kind``):
+
+* ``"exhaust"`` — pull ``n_blocks`` blocks (all free blocks when 0) out of
+  the allocator's free list for ``duration`` steps: allocator exhaustion
+  without a single real byte of pressure. The engine's schedulers see a dry
+  pool, defer/evict, and the blocks return on schedule — the free list
+  conserves by construction.
+* ``"corrupt"`` — overwrite one live pool block (``block`` id, or the
+  lowest live block when -1) with non-finite garbage: NaNs in dense pools,
+  maxed scale bytes + random payload in MX wire pools. The engine's
+  non-finite logits watch detects the poison at the sampling boundary and
+  raises ``WireCorruption``.
+* ``"slow"`` — inject ``sleep_s`` of latency into the step dispatch:
+  deadline pressure without real load.
+* ``"stuck"`` — inject enough latency to trip the step watchdog
+  (``max(2 * step_timeout_s, sleep_s)``): the engine raises ``StepStuck``.
+* ``"die"`` — raise ``EngineDead`` before the step dispatches: simulated
+  engine death with in-flight requests.
+
+Events are ONE-SHOT: each fires at the first step counter >= ``step`` and
+never again, so a supervisor replay (which restarts the step counter) does
+not re-trigger the fault that killed the previous attempt.
+
+CLI grammar (``FaultPlan.parse``): semicolon-separated events,
+``kind@step[:arg][xduration]`` —
+
+    exhaust@6x4        hold every free block from step 6 for 4 steps
+    exhaust@6:8x4      hold 8 blocks from step 6 for 4 steps
+    corrupt@9          corrupt the lowest live block at step 9
+    corrupt@9:3        corrupt block id 3 at step 9
+    slow@3:0.25        sleep 0.25 s in step 3's dispatch
+    stuck@7            trip the step watchdog at step 7
+    die@12             raise EngineDead at step 12
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["Fault", "FaultPlan", "FAULT_KINDS"]
+
+FAULT_KINDS = ("exhaust", "corrupt", "slow", "stuck", "die")
+
+_EVENT_RE = re.compile(
+    r"^(?P<kind>[a-z]+)@(?P<step>\d+)"
+    r"(?::(?P<arg>[0-9.]+))?(?:x(?P<duration>\d+))?$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scheduled fault event (see module docstring for kinds)."""
+
+    kind: str
+    step: int                 # engine step counter at which to fire
+    duration: int = 1         # exhaust: steps the held blocks stay held
+    n_blocks: int = 0         # exhaust: blocks to hold (0 = all free)
+    sleep_s: float = 0.0      # slow/stuck: injected dispatch latency
+    block: int = -1           # corrupt: block id (-1 = lowest live block)
+
+    def __post_init__(self) -> None:
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}: expected one of "
+                f"{', '.join(FAULT_KINDS)}")
+        if self.step < 0 or self.duration < 1:
+            raise ValueError(
+                f"fault {self.kind!r}: step must be >= 0 and duration >= 1")
+
+    def describe(self) -> str:
+        extra = {
+            "exhaust": f":{self.n_blocks or 'all'}x{self.duration}",
+            "corrupt": f":{'live' if self.block < 0 else self.block}",
+            "slow": f":{self.sleep_s}s",
+            "stuck": f":{self.sleep_s}s" if self.sleep_s else "",
+            "die": "",
+        }[self.kind]
+        return f"{self.kind}@{self.step}{extra}"
+
+
+class FaultPlan:
+    """A seeded, one-shot schedule of ``Fault`` events.
+
+    ``take(step)`` returns the not-yet-fired events due at ``step`` (any
+    event whose trigger step has passed fires at the next query, so plans
+    survive step counters that skip — e.g. idle gaps between arrivals) and
+    marks them fired. ``reset()`` re-arms every event for a from-scratch
+    rerun; a supervisor recovery deliberately does NOT reset, so the fault
+    that killed an attempt cannot re-kill the replay.
+
+    ``rng`` is the plan's seeded generator — the single source of the
+    corruption garbage bytes, so a plan is reproducible end to end.
+    """
+
+    def __init__(self, faults: Sequence[Fault] = (), *, seed: int = 0):
+        self.faults: List[Fault] = sorted(faults, key=lambda f: (f.step,
+                                                                 f.kind))
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self._fired = [False] * len(self.faults)
+
+    @classmethod
+    def parse(cls, text: Optional[str], *, seed: int = 0) -> "FaultPlan":
+        """Parse the CLI grammar (module docstring); None/"" -> empty plan."""
+        events: List[Fault] = []
+        for raw in (text or "").split(";"):
+            raw = raw.strip()
+            if not raw:
+                continue
+            m = _EVENT_RE.match(raw)
+            if m is None:
+                raise ValueError(
+                    f"bad fault event {raw!r}: expected "
+                    f"'kind@step[:arg][xduration]' with kind one of "
+                    f"{', '.join(FAULT_KINDS)} (e.g. 'exhaust@6x4', "
+                    f"'slow@3:0.25', 'die@12')")
+            kind, step = m.group("kind"), int(m.group("step"))
+            arg, dur = m.group("arg"), int(m.group("duration") or 1)
+            if kind == "exhaust":
+                f = Fault(kind=kind, step=step, duration=dur,
+                          n_blocks=int(float(arg)) if arg else 0)
+            elif kind == "corrupt":
+                f = Fault(kind=kind, step=step,
+                          block=int(float(arg)) if arg else -1)
+            elif kind in ("slow", "stuck"):
+                f = Fault(kind=kind, step=step,
+                          sleep_s=float(arg) if arg else 0.0)
+            else:
+                if arg or dur != 1:
+                    raise ValueError(f"fault event {raw!r}: '{kind}' takes "
+                                     f"no argument or duration")
+                f = Fault(kind=kind, step=step)
+            events.append(f)
+        return cls(events, seed=seed)
+
+    def __len__(self) -> int:
+        return len(self.faults)
+
+    @property
+    def n_pending(self) -> int:
+        return self._fired.count(False)
+
+    def take(self, step: int) -> List[Fault]:
+        """Pop every not-yet-fired event due at or before ``step``."""
+        out: List[Fault] = []
+        for i, f in enumerate(self.faults):
+            if not self._fired[i] and f.step <= step:
+                self._fired[i] = True
+                out.append(f)
+        return out
+
+    def reset(self) -> None:
+        """Re-arm every event (fresh rng too): a from-scratch rerun of the
+        same plan is bit-reproducible."""
+        self._fired = [False] * len(self.faults)
+        self.rng = np.random.default_rng(self.seed)
+
+    def garbage_bytes(self, shape: tuple) -> np.ndarray:
+        """Seeded random payload bytes for wire-block corruption."""
+        return self.rng.integers(0, 256, size=shape, dtype=np.uint8)
+
+    def describe(self) -> str:
+        if not self.faults:
+            return "no faults"
+        return "; ".join(f.describe() for f in self.faults) + \
+            f" (seed {self.seed})"

@@ -244,6 +244,7 @@ class BlockAllocator:
         self._free = collections.deque(range(1, n_blocks))
         self._free_set = set(self._free)   # O(1) membership / double-release
         self._ref: Dict[int, int] = {}     # block id -> live reference count
+        self._held: List[int] = []         # fault-injection holds (see hold())
         self.high_water = 0  # max blocks simultaneously referenced (stats)
 
     @property
@@ -265,10 +266,42 @@ class BlockAllocator:
     @property
     def n_allocated(self) -> int:
         """Blocks with at least one live reference."""
-        return (self.n_blocks - 1) - len(self._free) - self.n_cached
+        return (self.n_blocks - 1) - len(self._free) - self.n_cached \
+            - len(self._held)
+
+    @property
+    def n_held(self) -> int:
+        """Blocks sequestered by fault injection (``hold``): unallocatable
+        but not referenced by any request. Nonzero means pool pressure is
+        synthetic — exhaustion-raise sites must defer instead of raising."""
+        return len(self._held)
 
     def refcount(self, block: int) -> int:
         return self._ref.get(int(block), 0)
+
+    def hold(self, n: int = 0) -> int:
+        """Fault injection: sequester up to ``n`` free blocks (all free
+        blocks when ``n <= 0``) outside the free list, so schedulers see a
+        dry pool with zero real usage. Returns the number actually held.
+        Held blocks only move between the free list and the hold — never
+        through refcounts or the prefix index — so the free list conserves
+        exactly when ``unhold`` returns them."""
+        take = len(self._free) if n <= 0 else min(n, len(self._free))
+        for _ in range(take):
+            b = self._free.popleft()
+            self._free_set.discard(b)
+            self._held.append(b)
+        return take
+
+    def unhold(self) -> int:
+        """Return every held block to the free list (fault expiry or
+        recovery). Returns the number released back."""
+        n = len(self._held)
+        for b in self._held:
+            self._free.append(b)
+            self._free_set.add(b)
+        self._held.clear()
+        return n
 
     def alloc(self, n: int) -> Optional[List[int]]:
         """Pop ``n`` block ids at refcount 1, or None (and no change) if they

@@ -1,0 +1,146 @@
+"""Supervised recovery for the continuous-batching engine.
+
+``EngineSupervisor`` wraps ``Engine.run`` with a retry loop: when a run
+aborts with one of the RECOVERABLE engine-level faults it restores the
+engine and replays every request that has not reached a terminal outcome,
+with exponential backoff between attempts.
+
+Recovery taxonomy (matching serving/errors.py):
+
+* ``EngineDead`` / ``WireCorruption`` — the device pools are lost or
+  poisoned: HARD recovery. ``engine.recover(hard=True)`` discards pools,
+  allocator, and prefix index; the next run rebuilds them from scratch.
+* ``StepStuck`` — the step loop wedged but host request state and device
+  pools are intact: WARM recovery when the engine keeps a persistent
+  prefix index (``persistent_cache=True``) — in-flight blocks are
+  released but the pools and index stay warm, so replayed requests re-hit
+  their cached prefixes and skip the shared prefill. Without a persistent
+  index a warm pool is unreachable, so recovery degrades to hard.
+
+Replay correctness: unfinished requests re-enter ``run`` from their
+host-side ``Request`` state (prompt + knobs; any partial output is
+recomputed from scratch). Under greedy decoding, engine outputs are
+scheduling-independent (the mixed/split/preemption token-parity
+invariants), so a replayed request's tokens are identical to what a
+fault-free run would have produced — the chaos soak and tests assert
+exactly this. Completed requests are never re-run: their outcomes and
+timings survive from the attempt that finished them.
+
+Budget: ``max_restarts`` recoveries per ``run_supervised`` call; the
+fault that exceeds it propagates to the caller. Backoff sleeps
+``backoff_s * backoff_mult**(attempt-1)`` between attempts (injectable
+``sleep`` for tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.engine import Engine, Request
+from repro.serving.errors import EngineDead, StepStuck, WireCorruption
+from repro.serving.ttft import ServeStats
+
+__all__ = ["EngineSupervisor", "RecoveryEvent", "RECOVERABLE"]
+
+RECOVERABLE = (EngineDead, StepStuck, WireCorruption)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryEvent:
+    """One supervised recovery: what failed, how it was recovered, and the
+    detection-to-ready latency (excluding the deliberate backoff sleep —
+    reported separately so SLO math can attribute both)."""
+
+    attempt: int          # 1-based recovery count within this run
+    error: str            # exception class name (EngineDead / ...)
+    detail: str           # str(exception)
+    mode: str             # "hard" | "warm"
+    n_replayed: int       # unfinished requests carried into the next attempt
+    backoff_s: float      # deliberate backoff slept before the attempt
+    recovery_s: float     # detection -> engine ready (excludes backoff)
+
+
+class EngineSupervisor:
+    """Retry/replay wrapper over one ``Engine`` (module docstring).
+
+    ``run(requests)`` mirrors ``Engine.run`` and returns the same request
+    list with every request at a terminal outcome (or raises, after
+    ``max_restarts`` failed recoveries, with the last fault). Per-attempt
+    engine stats are merged into ``self.stats``; completed requests keep
+    the timing of the attempt that finished them, and a replayed request's
+    superseded partial timings are dropped so ``stats.timings`` holds
+    exactly one record per request. ``self.events`` records each recovery;
+    ``report()`` summarizes.
+    """
+
+    def __init__(self, engine: Engine, *, max_restarts: int = 3,
+                 backoff_s: float = 0.05, backoff_mult: float = 2.0,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.engine = engine
+        self.max_restarts = int(max_restarts)
+        self.backoff_s = float(backoff_s)
+        self.backoff_mult = float(backoff_mult)
+        self._sleep = sleep
+        self.events: List[RecoveryEvent] = []
+        self.stats = ServeStats()
+
+    def run(self, requests: List[Request], *, seed: int = 0,
+            extra_inputs: Optional[Dict] = None) -> List[Request]:
+        self.events = []
+        self.stats = ServeStats()
+        pending = list(requests)
+        rows = {id(r): i for i, r in enumerate(requests)}  # extra_inputs map
+        attempt = 0
+        while True:
+            extra: Optional[Dict] = None
+            if extra_inputs is not None:
+                idx = [rows[id(r)] for r in pending]
+                extra = {k: np.asarray(v)[idx] for k, v in extra_inputs.items()}
+            try:
+                self.engine.run(pending, seed=seed, extra_inputs=extra)
+            except RECOVERABLE as e:
+                t_detect = time.perf_counter()
+                attempt += 1
+                self.stats.merge(self.engine.stats)
+                if attempt > self.max_restarts:
+                    raise
+                warm = (isinstance(e, StepStuck)
+                        and self.engine.persistent_cache)
+                self.engine.recover(hard=not warm)
+                pending = [r for r in pending if r.timing is None]
+                for r in pending:
+                    r.arrival_s = 0.0  # replay immediately on the new clock
+                recovery_s = time.perf_counter() - t_detect
+                backoff = self.backoff_s * self.backoff_mult ** (attempt - 1)
+                self.events.append(RecoveryEvent(
+                    attempt=attempt, error=type(e).__name__, detail=str(e),
+                    mode="warm" if warm else "hard",
+                    n_replayed=len(pending), backoff_s=backoff,
+                    recovery_s=recovery_s))
+                if backoff > 0:
+                    self._sleep(backoff)
+                continue
+            self.stats.merge(self.engine.stats)
+            break
+        # replayed requests re-recorded under their final attempt; drop the
+        # superseded partial records so timings hold one record per request
+        finals = {id(r.timing) for r in requests if r.timing is not None}
+        self.stats.timings = [t for t in self.stats.timings
+                              if id(t) in finals]
+        return requests
+
+    def report(self) -> Dict[str, object]:
+        """Recovery summary for benchmark JSON: attempt/mode counts, total
+        backoff and recovery latency, plus the merged serving summary."""
+        return {
+            "n_recoveries": len(self.events),
+            "n_hard": sum(1 for e in self.events if e.mode == "hard"),
+            "n_warm": sum(1 for e in self.events if e.mode == "warm"),
+            "recovery_s_total": sum(e.recovery_s for e in self.events),
+            "backoff_s_total": sum(e.backoff_s for e in self.events),
+            "errors": [e.error for e in self.events],
+            "serve": self.stats.summary(),
+        }

@@ -24,6 +24,7 @@ from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
 from repro.core.formats import MXSpec
+from repro.serving.errors import OUTCOME_OK, TERMINAL_OUTCOMES
 
 __all__ = ["Hardware", "HARDWARE", "ttft_seconds", "ttft_breakdown",
            "RequestTiming", "ServeStats"]
@@ -123,20 +124,26 @@ class RequestTiming:
     """Wall-clock milestones and token accounting for ONE request served by
     the continuous-batching engine, relative to the run's start.
 
-    The engine fills one of these per request at retirement (also attached
-    as ``Request.timing``); ``ServeStats`` aggregates them. Derived
-    properties: ``ttft_s`` (arrival to first sampled token — queueing
-    included), ``latency_s`` (arrival to last token), ``queue_s`` (arrival
-    to first admission).
+    The engine fills one of these per request at its TERMINAL outcome (also
+    attached as ``Request.timing``); ``ServeStats`` aggregates them.
+    ``outcome`` is one of ``TERMINAL_OUTCOMES`` (serving/errors.py):
+    ``"ok"`` requests retired normally; degraded outcomes (``"rejected"`` /
+    ``"timed_out"`` / ``"cancelled"``) may never have been admitted or
+    sampled, so ``admitted_s`` / ``first_token_s`` are Optional and the
+    derived properties return NaN when the milestone was never reached.
+    Derived properties: ``ttft_s`` (arrival to first sampled token —
+    queueing included), ``latency_s`` (arrival to the terminal outcome),
+    ``queue_s`` (arrival to first admission).
     """
 
     arrival_s: float                 # request entered the system
-    admitted_s: float                # first admission (prefill start)
-    first_token_s: float             # first sampled token (TTFT endpoint)
-    finished_s: float                # last token sampled
+    admitted_s: Optional[float]      # first admission (None: never admitted)
+    first_token_s: Optional[float]   # first sampled token (None: none sampled)
+    finished_s: float                # terminal outcome reached
     n_prompt: int                    # tokens in the ORIGINAL prompt
     n_generated: int                 # tokens sampled (== max_new_tokens
-                                     # unless eos_id stopped decode early)
+                                     # unless eos_id / a deadline / a cancel
+                                     # stopped decode early)
     n_preemptions: int = 0           # evict/recompute round trips
     n_cached_prompt: int = 0         # prompt tokens served from shared
                                      # prefix-cache blocks instead of being
@@ -144,9 +151,18 @@ class RequestTiming:
                                      # so preemption recompute counts again)
     inter_token_s: Optional[List[float]] = None  # gaps between consecutive
                                                  # sampled tokens (TPOT samples)
+    outcome: str = OUTCOME_OK        # terminal outcome (TERMINAL_OUTCOMES)
+
+    def __post_init__(self) -> None:
+        if self.outcome not in TERMINAL_OUTCOMES:
+            raise ValueError(
+                f"unknown outcome {self.outcome!r}: expected one of "
+                f"{', '.join(TERMINAL_OUTCOMES)}")
 
     @property
     def ttft_s(self) -> float:
+        if self.first_token_s is None:
+            return float("nan")
         return self.first_token_s - self.arrival_s
 
     @property
@@ -155,6 +171,8 @@ class RequestTiming:
 
     @property
     def queue_s(self) -> float:
+        if self.admitted_s is None:
+            return float("nan")
         return self.admitted_s - self.arrival_s
 
 
@@ -212,6 +230,17 @@ class ServeStats:
         self.n_dispatches += n
         self.off_step_prefill_tokens += prefill_tokens
 
+    def merge(self, other: "ServeStats") -> None:
+        """Fold another run's records into this one — the supervisor
+        aggregates per-attempt engine stats into one report this way.
+        Timings are appended as-is (replayed requests re-record under their
+        final attempt; the supervisor drops superseded records first)."""
+        self.timings.extend(other.timings)
+        self.n_steps += other.n_steps
+        self.n_dispatches += other.n_dispatches
+        self.step_tokens.extend(other.step_tokens)
+        self.off_step_prefill_tokens += other.off_step_prefill_tokens
+
     def summary(self) -> Dict[str, float]:
         """Aggregate the run. Keys (seconds unless noted):
 
@@ -235,11 +264,18 @@ class ServeStats:
           prefix-cache blocks instead of recomputed; ``prefix_hit_rate``
           normalizes by original prompt tokens (can exceed 1.0 when
           preempted requests re-skip on readmission).
+        - ``n_{ok,rejected,timed_out,cancelled}`` — terminal outcome
+          counts (sum to ``n_requests``); ``goodput_tokens_per_s`` counts
+          only tokens from ``ok`` requests over the makespan — tokens spent
+          on requests that later timed out or were cancelled are throughput
+          but not goodput. TTFT percentiles cover only requests that
+          produced a first token; latency percentiles cover every request
+          (arrival to terminal outcome).
         """
         ts = self.timings
         if not ts:
             return {"n_requests": 0}
-        ttfts = [t.ttft_s for t in ts]
+        ttfts = [t.ttft_s for t in ts if t.first_token_s is not None]
         lats = [t.latency_s for t in ts]
         # inter-token latency (TPOT) pooled across requests: the decode-side
         # metric that head-of-line blocking inflates (a whole-prompt prefill
@@ -251,11 +287,15 @@ class ServeStats:
         prompt_tokens = sum(t.n_prompt for t in ts)
         cached = sum(t.n_cached_prompt for t in ts)
         step_total = sum(p + d for p, d in self.step_tokens)
+        outcomes = {o: sum(1 for t in ts if t.outcome == o)
+                    for o in TERMINAL_OUTCOMES}
+        good = sum(t.n_generated for t in ts if t.outcome == OUTCOME_OK)
         return {
             "n_requests": len(ts),
-            "ttft_p50_s": _percentile(ttfts, 50),
-            "ttft_p90_s": _percentile(ttfts, 90),
-            "ttft_mean_s": sum(ttfts) / len(ttfts),
+            # all-degraded runs have no first tokens; stay NaN-free
+            "ttft_p50_s": _percentile(ttfts, 50) if ttfts else 0.0,
+            "ttft_p90_s": _percentile(ttfts, 90) if ttfts else 0.0,
+            "ttft_mean_s": sum(ttfts) / len(ttfts) if ttfts else 0.0,
             "latency_p50_s": _percentile(lats, 50),
             "latency_p90_s": _percentile(lats, 90),
             # no-gap traffic (every request emits a single token) has no
@@ -277,4 +317,10 @@ class ServeStats:
             "prefill_tokens_skipped": cached,
             "prefix_hit_rate": (cached / prompt_tokens if prompt_tokens
                                 else 0.0),
+            "n_ok": outcomes[OUTCOME_OK],
+            "n_rejected": outcomes["rejected"],
+            "n_timed_out": outcomes["timed_out"],
+            "n_cancelled": outcomes["cancelled"],
+            "goodput_tokens_per_s": (good / makespan if makespan > 0
+                                     else float("nan")),
         }

@@ -56,10 +56,20 @@ HOST_ZONES: Dict[str, Tuple[str, ...]] = {
         "Engine._first_token", "Engine._pack_prefill", "Engine._grow_or_evict",
         "Engine._preempt", "Engine._clear_slot", "Engine._retire",
         "Engine._soft_reset",
+        # robustness layer: outcome sweeps, fault decisions, and recovery
+        # are scheduler state machinery — the one device-touching fault
+        # (_corrupt_block / _corrupt_impl) deliberately sits OUTSIDE the
+        # zone, and _apply_faults only delegates to it
+        "Engine._finish", "Engine._record_terminal", "Engine._expired",
+        "Engine._sweep_terminal", "Engine._bound_queue",
+        "Engine._apply_faults", "Engine._guard_step", "Engine.recover",
     ),
+    # fault PLANNING is pure host-side state: a FaultPlan decides what
+    # fails and when; only the engine may touch the device to apply it
+    "serving/faults.py": ("Fault", "FaultPlan"),
 }
 
-_ALLOCATOR_PRIVATE = {"_free", "_free_set", "_ref"}
+_ALLOCATOR_PRIVATE = {"_free", "_free_set", "_ref", "_held"}
 _DEVICE_ROOTS = {"jnp", "lax"}
 _SYNC_OK_PATHS = ("scripts/", "benchmarks/", "tests/", "examples/")
 _MUTABLE_CTORS = {"list", "dict", "set", "defaultdict", "deque"}

@@ -1,0 +1,361 @@
+"""Fault injection, graceful failure semantics, and supervised recovery
+(docs/serving.md §Failure modes & recovery).
+
+The contract under test: injected faults (allocator exhaustion, wire
+corruption, stuck steps, engine death) and load pathologies (deadline
+misses, cancellations, queue overflow, eviction storms) always resolve to a
+TERMINAL outcome per request — never a crash, hang, or block leak — and
+supervised recovery replays unfinished requests to TOKEN-IDENTICAL outputs
+(greedy decode is scheduling-independent, so a crash mid-decode is
+invisible in what the request ultimately returns).
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.formats import KVCacheSpec
+from repro.core.tp import TPContext
+from repro.models.model import Model
+from repro.serving import (
+    OUTCOME_CANCELLED, OUTCOME_OK, OUTCOME_REJECTED, OUTCOME_TIMED_OUT,
+    TERMINAL_OUTCOMES, BlockAllocator, Engine, EngineDead, EngineSupervisor,
+    Fault, FaultPlan, InvalidRequest, PoolExhausted, Request, RequestTiming,
+    ServeStats, SlotExhausted, StepStuck, WireCorruption,
+)
+from tests.conftest import fp32_reduced
+
+CTX = TPContext(mesh=None)
+
+
+@pytest.fixture(scope="module")
+def mp():
+    cfg = fp32_reduced("internlm2-1.8b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _reqs(cfg, n, plen, new_tokens, **kw):
+    return [Request(prompt=(np.arange(plen, dtype=np.int32) + 3 * i)
+                    % cfg.vocab_size,
+                    max_new_tokens=new_tokens, **kw) for i in range(n)]
+
+
+# ------------------------------------------------------------- fault plans
+
+def test_fault_plan_parse_grammar():
+    plan = FaultPlan.parse("exhaust@6:8x4; corrupt@9;slow@3:0.25;die@12",
+                           seed=7)
+    assert len(plan) == 4 and plan.seed == 7
+    by_kind = {f.kind: f for f in plan.faults}
+    assert by_kind["exhaust"].n_blocks == 8
+    assert by_kind["exhaust"].duration == 4
+    assert by_kind["corrupt"].block == -1  # default: lowest live block
+    assert by_kind["slow"].sleep_s == 0.25
+    assert FaultPlan.parse(None).faults == [] and FaultPlan.parse("").faults == []
+    with pytest.raises(ValueError, match="bad fault event"):
+        FaultPlan.parse("exhaust")  # no @step
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.parse("explode@3")
+    with pytest.raises(ValueError, match="takes no argument"):
+        FaultPlan.parse("die@3:5")
+    with pytest.raises(ValueError):
+        Fault(kind="exhaust", step=-1)
+
+
+def test_fault_plan_one_shot_take_and_reset():
+    plan = FaultPlan.parse("exhaust@2;die@5", seed=0)
+    assert plan.take(1) == []
+    # events fire at the first query at-or-after their step, then never again
+    fired = plan.take(3)
+    assert [f.kind for f in fired] == ["exhaust"]
+    assert plan.take(3) == [] and plan.n_pending == 1
+    assert [f.kind for f in plan.take(99)] == ["die"]
+    assert plan.n_pending == 0
+    # reset re-arms everything and reseeds the garbage rng reproducibly
+    g1 = plan.garbage_bytes((4,))
+    plan.reset()
+    assert plan.n_pending == 2
+    np.testing.assert_array_equal(plan.garbage_bytes((4,)), g1)
+
+
+def test_allocator_hold_unhold_conserves():
+    a = BlockAllocator(n_blocks=8)  # 7 usable (block 0 reserved)
+    assert a.n_free == 7 and a.n_held == 0
+    assert a.hold(3) == 3
+    assert a.n_free == 4 and a.n_held == 3
+    assert a.alloc(5) is None  # held blocks are real pressure
+    got = a.alloc(4)
+    assert got is not None and len(got) == 4
+    assert a.hold() == 0  # nothing free left to hold
+    assert a.unhold() == 3
+    a.release(got)
+    assert a.n_free == 7 and a.n_held == 0 and a.n_allocated == 0
+
+
+# ------------------------------------------------- typed errors, validation
+
+def test_invalid_request_validation():
+    with pytest.raises(InvalidRequest, match="empty"):
+        Request(prompt=np.zeros((0,), np.int32), max_new_tokens=4)
+    with pytest.raises(InvalidRequest, match="max_new_tokens"):
+        Request(prompt=np.arange(4, dtype=np.int32), max_new_tokens=0)
+    with pytest.raises(InvalidRequest, match="deadline"):
+        Request(prompt=np.arange(4, dtype=np.int32), max_new_tokens=4,
+                deadline_s=-1.0)
+    # InvalidRequest subclasses ValueError: old callers' except clauses hold
+    assert issubclass(InvalidRequest, ValueError)
+
+
+def test_cache_spec_parse_error_enumerates_formats():
+    """The unknown-spec error must teach the valid grammar: dense aliases,
+    element formats, the full spec-name form, and the +pallas suffix."""
+    with pytest.raises(ValueError) as ei:
+        KVCacheSpec.parse("fp9_e9m9")
+    msg = str(ei.value)
+    assert "fp9_e9m9" in msg
+    for needle in ("bf16", "dense", "fp4_e2m1", "int8",
+                   "'<elem>_b<block>_<scale>'", "e8m0", "+pallas",
+                   "fp4_e2m1+pallas"):
+        assert needle in msg, needle
+
+
+def test_pool_exhausted_and_slot_exhausted_typed(mp):
+    cfg, model, params = mp
+    with pytest.raises(SlotExhausted):
+        Engine(model, params, CTX, max_slots=0, max_len=32)
+    eng = Engine(model, params, CTX, max_slots=2, max_len=64,
+                 block_size=8, n_blocks=4)
+    # 30-token prompt + 8 decode needs 5 blocks; the pool has 3 usable —
+    # impossible even with the whole pool, so the engine must say so
+    # (typed), not deadlock retrying admission forever
+    with pytest.raises(PoolExhausted, match="pool"):
+        eng.run(_reqs(cfg, 1, 30, 8))
+
+
+# --------------------------------------------- deadlines and cancellation
+
+def test_total_deadline_times_out_and_frees_blocks(mp):
+    cfg, model, params = mp
+    eng = Engine(model, params, CTX, max_slots=2, max_len=520)
+    eng.run(_reqs(cfg, 1, 16, 2))  # warm the programs outside the deadline
+    reqs = _reqs(cfg, 1, 16, 480, deadline_s=0.25)
+    eng.run(reqs)
+    r = reqs[0]
+    assert r.outcome == OUTCOME_TIMED_OUT
+    assert len(r.output) < 480  # cut off mid-decode, partial output kept
+    assert eng.allocator.n_allocated == 0  # blocks released on cancel
+
+
+def test_ttft_deadline_times_out_before_first_token(mp):
+    cfg, model, params = mp
+    eng = Engine(model, params, CTX, max_slots=2, max_len=64,
+                 deadline_ttft_s=1e-6)
+    reqs = _reqs(cfg, 1, 16, 8)
+    eng.run(reqs)
+    r = reqs[0]
+    assert r.outcome == OUTCOME_TIMED_OUT
+    assert r.timing.first_token_s is None
+    assert np.isnan(r.timing.ttft_s)  # NaN-safe, not a crash
+    assert eng.allocator.n_allocated == 0
+
+
+def test_cancellation_pre_run_and_mid_decode(mp):
+    cfg, model, params = mp
+    eng = Engine(model, params, CTX, max_slots=2, max_len=520)
+    eng.run(_reqs(cfg, 1, 16, 2))  # warmup
+    pre, mid = _reqs(cfg, 2, 16, 480)
+    pre.cancel()
+    # cancel() is a host-side one-way flip: safe from another thread while
+    # the engine is mid-run
+    t = threading.Timer(0.2, mid.cancel)
+    t.start()
+    try:
+        eng.run([pre, mid])
+    finally:
+        t.cancel()
+    assert pre.outcome == OUTCOME_CANCELLED
+    assert pre.timing.admitted_s is None  # never took a slot
+    assert mid.outcome == OUTCOME_CANCELLED
+    assert len(mid.output) < 480
+    assert eng.allocator.n_allocated == 0
+
+
+def test_bounded_admission_rejects_overflow(mp):
+    cfg, model, params = mp
+    eng = Engine(model, params, CTX, max_slots=2, max_len=64, max_queue=1)
+    reqs = _reqs(cfg, 4, 16, 4)  # all arrive at once: 2 slots + 1 queued
+    eng.run(reqs)
+    outs = [r.outcome for r in reqs]
+    assert outs.count(OUTCOME_REJECTED) == 1
+    assert outs.count(OUTCOME_OK) == 3
+    rej = reqs[outs.index(OUTCOME_REJECTED)]
+    assert rej.timing.admitted_s is None and len(rej.output) == 0
+
+
+# -------------------------------------------------------- eviction storms
+
+@pytest.mark.parametrize("spec", [None, "fp4_e2m1"])
+def test_eviction_storm_terminates_and_conserves(mp, spec):
+    """Full pool, every slot growing: the preemption storm must terminate
+    (bounded preemptions per step + thrash degradation, no livelock), retire
+    every request OK, and conserve the free list — in both cache modes."""
+    cfg, model, params = mp
+    eng = Engine(model, params, CTX, max_slots=4, max_len=40, block_size=8,
+                 n_blocks=9, cache_spec=spec)
+    reqs = _reqs(cfg, 4, 8, 24)  # demand 16 blocks against 8 usable
+    eng.run(reqs)
+    assert all(r.outcome == OUTCOME_OK for r in reqs)
+    assert all(len(r.output) == 24 for r in reqs)
+    s = eng.stats.summary()
+    assert s["n_preemptions"] > 0  # it really stormed
+    assert eng.allocator.n_allocated == 0 and eng.allocator.n_held == 0
+    assert eng.allocator.n_free == 8
+    if spec is None:
+        # dense pools roundtrip exactly: storm outputs must match a run
+        # with an ample pool token for token (preemption never edits tokens)
+        calm = Engine(model, params, CTX, max_slots=4, max_len=40,
+                      block_size=8)
+        ref = _reqs(cfg, 4, 8, 24)
+        calm.run(ref)
+        for a, b in zip(reqs, ref):
+            np.testing.assert_array_equal(a.output, b.output)
+
+
+def test_exhaust_fault_defers_and_conserves(mp):
+    cfg, model, params = mp
+    plan = FaultPlan.parse("exhaust@2x5")
+    eng = Engine(model, params, CTX, max_slots=2, max_len=64,
+                 fault_plan=plan)
+    reqs = _reqs(cfg, 2, 16, 8)
+    eng.run(reqs)
+    assert all(r.outcome == OUTCOME_OK for r in reqs)
+    assert plan.n_pending == 0  # the fault really fired
+    assert eng.allocator.n_held == 0 and eng.allocator.n_allocated == 0
+    ref_eng = Engine(model, params, CTX, max_slots=2, max_len=64)
+    ref = _reqs(cfg, 2, 16, 8)
+    ref_eng.run(ref)
+    for a, b in zip(reqs, ref):
+        np.testing.assert_array_equal(a.output, b.output)
+
+
+# --------------------------------------------------- supervised recovery
+
+def _ref_outputs(cfg, model, params, n, plen, new, **engine_kw):
+    eng = Engine(model, params, CTX, max_slots=2, max_len=64, **engine_kw)
+    reqs = _reqs(cfg, n, plen, new)
+    eng.run(reqs)
+    return [r.output for r in reqs]
+
+
+def test_die_supervised_hard_recovery_token_identical(mp):
+    cfg, model, params = mp
+    ref = _ref_outputs(cfg, model, params, 3, 16, 8)
+    eng = Engine(model, params, CTX, max_slots=2, max_len=64,
+                 fault_plan=FaultPlan.parse("die@3"))
+    sup = EngineSupervisor(eng, backoff_s=0.0)
+    reqs = _reqs(cfg, 3, 16, 8)
+    sup.run(reqs)
+    assert [e.error for e in sup.events] == ["EngineDead"]
+    assert sup.events[0].mode == "hard"
+    assert all(r.outcome == OUTCOME_OK for r in reqs)
+    for a, b in zip(reqs, ref):
+        np.testing.assert_array_equal(a.output, b)
+    # one final timing record per request, no superseded partials
+    assert len(sup.stats.timings) == 3
+    assert sup.report()["n_recoveries"] == 1
+
+
+def test_corrupt_wire_detected_and_recovered(mp):
+    """A poisoned wire block must be caught at the sampling boundary
+    (WireCorruption), never silently absorbed into any request's tokens."""
+    cfg, model, params = mp
+    ref = _ref_outputs(cfg, model, params, 2, 16, 8, cache_spec="fp4_e2m1")
+    eng = Engine(model, params, CTX, max_slots=2, max_len=64,
+                 cache_spec="fp4_e2m1", fault_plan=FaultPlan.parse("corrupt@3"))
+    sup = EngineSupervisor(eng, backoff_s=0.0)
+    reqs = _reqs(cfg, 2, 16, 8)
+    sup.run(reqs)
+    assert [e.error for e in sup.events] == ["WireCorruption"]
+    assert sup.events[0].mode == "hard"  # pools are poisoned: rebuild
+    assert all(r.outcome == OUTCOME_OK for r in reqs)
+    for a, b in zip(reqs, ref):
+        np.testing.assert_array_equal(a.output, b)
+
+
+def test_stuck_step_warm_recovery_with_persistent_cache(mp):
+    cfg, model, params = mp
+    ref = _ref_outputs(cfg, model, params, 2, 16, 8)
+    eng = Engine(model, params, CTX, max_slots=2, max_len=64,
+                 prefix_cache=True, persistent_cache=True,
+                 step_timeout_s=0.05, fault_plan=FaultPlan.parse("stuck@4"))
+    sup = EngineSupervisor(eng, backoff_s=0.0)
+    reqs = _reqs(cfg, 2, 16, 8)
+    sup.run(reqs)
+    # pools are intact after a stall, so recovery keeps them warm (the
+    # replay may trip the tight watchdog again on a compile step — extra
+    # warm recoveries are legitimate, hard ones are not)
+    assert len(sup.events) >= 1
+    assert all(e.error == "StepStuck" and e.mode == "warm"
+               for e in sup.events)
+    assert all(r.outcome == OUTCOME_OK for r in reqs)
+    for a, b in zip(reqs, ref):
+        np.testing.assert_array_equal(a.output, b)
+
+
+def test_supervisor_max_restarts_and_backoff(mp):
+    cfg, model, params = mp
+    eng = Engine(model, params, CTX, max_slots=2, max_len=64,
+                 fault_plan=FaultPlan.parse("die@1;die@2;die@3"))
+    sleeps = []
+    sup = EngineSupervisor(eng, max_restarts=2, backoff_s=0.01,
+                           backoff_mult=2.0, sleep=sleeps.append)
+    with pytest.raises(EngineDead):
+        sup.run(_reqs(cfg, 2, 16, 8))
+    # two recoveries attempted (exponential backoff), the third death raised
+    assert len(sup.events) == 2
+    np.testing.assert_allclose(sleeps, [0.01, 0.02])
+
+
+# --------------------------------------------------------- stats plumbing
+
+def test_request_timing_nan_safe_and_outcome_validated():
+    t = RequestTiming(arrival_s=0.0, admitted_s=None, first_token_s=None,
+                      finished_s=1.0, n_prompt=4, n_generated=0,
+                      outcome=OUTCOME_REJECTED)
+    assert np.isnan(t.ttft_s) and np.isnan(t.queue_s)
+    assert t.latency_s == 1.0
+    with pytest.raises(ValueError, match="unknown outcome"):
+        RequestTiming(arrival_s=0.0, admitted_s=None, first_token_s=None,
+                      finished_s=1.0, n_prompt=4, n_generated=0,
+                      outcome="exploded")
+    assert set(TERMINAL_OUTCOMES) == {OUTCOME_OK, OUTCOME_REJECTED,
+                                      OUTCOME_TIMED_OUT, OUTCOME_CANCELLED}
+
+
+def test_serve_stats_outcome_counts_goodput_and_merge():
+    def t(outcome, first, gen, fin):
+        return RequestTiming(arrival_s=0.0, admitted_s=0.0 if first else None,
+                             first_token_s=first, finished_s=fin,
+                             n_prompt=4, n_generated=gen, outcome=outcome)
+
+    a = ServeStats()
+    a.record(t(OUTCOME_OK, 0.1, 10, 1.0))
+    a.record(t(OUTCOME_TIMED_OUT, 0.2, 6, 2.0))
+    b = ServeStats()
+    b.record(t(OUTCOME_OK, 0.3, 4, 2.0))
+    b.record(t(OUTCOME_REJECTED, None, 0, 0.5))
+    b.record_step(8, 4)
+    a.merge(b)
+    s = a.summary()
+    assert (s["n_ok"], s["n_rejected"], s["n_timed_out"],
+            s["n_cancelled"]) == (2, 1, 1, 0)
+    assert s["n_requests"] == 4 and s["n_steps"] == 1
+    # goodput counts only OK-request tokens over the makespan (2.0 s):
+    # the timed-out request's 6 tokens are throughput, not goodput
+    assert s["goodput_tokens_per_s"] == pytest.approx((10 + 4) / 2.0)
+    assert s["tokens_per_s"] == pytest.approx(20 / 2.0)
+    # TTFT percentiles only cover requests that produced a first token
+    assert s["ttft_p50_s"] == pytest.approx(0.2)
