@@ -38,6 +38,15 @@ mixed step halves is exactly the non-compute cost that dominates small
 batches (and, under TP, each dispatch is a full set of per-layer
 collective launches).
 
+With ``--compress 1`` the run adds the compression-gating comparison: dense
+vs gated-compressed mixed serving under the same Poisson traffic, per cache
+mode. The gated engine dispatches between pre-compiled dense and
+MX-compressed mixed programs on each step's real prefill/decode composition
+(``CompressionPolicy.active_for_step``); reported: step-time delta,
+collective bytes on the TP wire (asserted strictly smaller on a real mesh),
+and decode-quality drift (greedy token divergence point + prefill logits
+rel-L2) vs the dense reference.
+
 With ``--shared-prefix-len`` the run adds the prefix-cache comparison: the
 same Poisson traffic whose prompts share a system-prompt-style prefix, with
 automatic prefix caching off vs on, reporting cold vs warm TTFT, the
@@ -343,6 +352,147 @@ def compare_step_modes(model, params, mesh, args):
             "dispatch_ratio": round(ratio, 3),
             "mixed_fewer_dispatches": True,
             "token_match_vs_split": 1.0,
+        })
+    return out
+
+
+def _mixed_step_wire_bytes(engine):
+    """Per-step TP-axis bytes-on-wire of each mixed gate variant, derived
+    statically from the engine's traced programs (the same inventory the
+    auditor checks): {"compressed": bytes, "dense": bytes} — a variant the
+    engine doesn't hold reports 0."""
+    from repro.staticcheck import collect_collectives
+
+    out = {"compressed": 0, "dense": 0}
+    traces = engine.trace_programs()
+    names = (("compressed", "mixed"), ("dense", "mixed-dense")) \
+        if "mixed-dense" in traces else (("dense", "mixed"),)
+    for key, name in names:
+        t = traces[name]
+        out[key] = sum(r.bytes_on_wire
+                       for r in collect_collectives(t.jaxpr, t.axis_sizes)
+                       if t.tp_axis in r.axes)
+    return out
+
+
+def compare_compression_modes(model, params, mesh, args):
+    """The paper's thesis at the serving surface: dense vs GATED-COMPRESSED
+    mixed serving under the same Poisson traffic, in each requested cache
+    mode. The gated engine compiles one mixed program per gate variant
+    (compressed / dense) and dispatches per step on the batch's real
+    composition (``CompressionPolicy.active_for_step``): prefill-dominated
+    steps take the MX-compressed TP collectives, decode-dominated steps
+    stay dense.
+
+    Reported per mode: per-step wall-time delta; collective bytes on the
+    wire (per-variant bytes derived statically from the traced programs —
+    the same inventory the static auditor checks — weighted by how many
+    steps each variant actually served) with the reduction vs the dense
+    reference asserted nonzero whenever a compressed step ran on a real
+    mesh; and decode-quality drift vs the dense reference — the greedy
+    token divergence point per request (index of the first differing
+    token; requests can differ once compressed prefill perturbs logits)
+    and the logits rel-L2 of a compressed vs dense prefill on a probe
+    prompt. Compile-once is asserted per variant (2 programs gated, 1
+    dense): the gate never recompiles, it picks a pre-compiled variant.
+    """
+    chunk = args.prefill_chunk or 2 * args.block_size
+    budget = args.token_budget or chunk + args.slots
+    spec = MXSpec.make("fp4_e2m1", 32, "e8m0")
+    policy = CompressionPolicy(spec=spec,
+                               overlap_chunks=args.overlap_chunks)
+    cache_modes = [("bf16", None)]
+    if args.cache_spec and KVCacheSpec.parse(args.cache_spec).quantized:
+        cspec = KVCacheSpec.parse(args.cache_spec)
+        cache_modes.append((cspec.mx.name, cspec))
+    print(f"\n-- compression modes: dense vs gated-compressed mixed serving "
+          f"({policy.describe()}, overlap_chunks={args.overlap_chunks}, "
+          f"token budget {budget}) --")
+    out = []
+    for cname, cspec in cache_modes:
+        mk = lambda: build_requests(args.requests, args.prompt_len,
+                                    args.new_tokens, args.rate,
+                                    model.cfg.vocab_size, seed=args.seed)
+        rec_d, out_d, eng_d = run_policy(
+            f"{cname}/dense", NO_COMPRESSION, model, params, mesh, args,
+            cache_spec=cspec, prefill_chunk=chunk, token_budget=budget,
+            requests_fn=mk)
+        rec_g, out_g, eng_g = run_policy(
+            f"{cname}/gated", policy, model, params, mesh, args,
+            cache_spec=cspec, prefill_chunk=chunk, token_budget=budget,
+            requests_fn=mk)
+        # compile-once per gate variant: the per-step gate dispatches
+        # between pre-compiled programs, it never triggers a recompile
+        assert eng_d.prefill_cache_size() == 1, eng_d.prefill_cache_size()
+        assert eng_g.gate_variants() == ["dense", "compressed"]
+        assert eng_g.prefill_cache_size() == 2, eng_g.prefill_cache_size()
+        gates = dict(eng_g.gate_counts)
+        assert gates["compressed"] > 0, (
+            f"[{cname}] prefill-dominated traffic never took the "
+            f"compressed gate: {gates}")
+        # collective bytes: static per-step inventory x observed dispatches
+        per_d = _mixed_step_wire_bytes(eng_d)
+        per_g = _mixed_step_wire_bytes(eng_g)
+        bytes_d = per_d["dense"] * rec_d["steps"]
+        bytes_g = (per_g["compressed"] * gates["compressed"]
+                   + per_g["dense"] * gates["dense"])
+        if mesh is not None:
+            # the acceptance metric: compressed steps put strictly fewer
+            # bytes on the TP wire (mesh-less runs have no collectives)
+            assert per_g["compressed"] < per_d["dense"], (per_g, per_d)
+            assert bytes_g < bytes_d, (bytes_g, bytes_d)
+        # decode-quality drift: first greedy divergence index per request
+        # (None = exact match), and prefill logits rel-L2 on a probe prompt
+        div = []
+        for g, d in zip(out_g, out_d):
+            n = min(len(g), len(d))
+            idx = next((i for i in range(n) if g[i] != d[i]), None)
+            div.append(idx if idx is not None
+                       else (None if len(g) == len(d) else n))
+        n_match = sum(1 for i in div if i is None)
+        probe = mk()[0].prompt
+        cache = lambda: model.init_cache(1, len(probe), jnp.float32)
+        batch = {"tokens": jnp.asarray(probe[None, :])}
+        lg_d, _ = jax.jit(lambda p, b: model.prefill(
+            make_context(mesh, None, policy=NO_COMPRESSION), p, b,
+            cache()))(params, batch)
+        lg_g, _ = jax.jit(lambda p, b: model.prefill(
+            make_context(mesh, None, policy=policy), p, b,
+            cache()))(params, batch)
+        rel_l2 = float(jnp.linalg.norm(lg_g.astype(jnp.float32) - lg_d)
+                       / (jnp.linalg.norm(lg_d.astype(jnp.float32)) + 1e-9))
+        step_d = rec_d["wall_s"] / max(1, rec_d["steps"])
+        step_g = rec_g["wall_s"] / max(1, rec_g["steps"])
+        first_div = min((i for i in div if i is not None), default=None)
+        print(f"  [{cname}] per-step wall {step_d * 1e3:.2f} ms (dense) vs "
+              f"{step_g * 1e3:.2f} ms (gated), delta "
+              f"{(step_g - step_d) * 1e3:+.2f} ms/step; "
+              f"steps {gates['compressed']} compressed / {gates['dense']} "
+              f"dense; wire bytes {bytes_d} -> {bytes_g} "
+              f"({bytes_d / max(1, bytes_g):.2f}x); token match "
+              f"{n_match}/{len(div)}"
+              + ("" if first_div is None
+                 else f" (earliest divergence at token {first_div})")
+              + f"; prefill logits rel_l2={rel_l2:.4f}")
+        out.append({
+            "cache_mode": cname,
+            "policy": policy.describe(),
+            "overlap_chunks": args.overlap_chunks,
+            "token_budget": budget,
+            "dense": rec_d, "gated": rec_g,
+            "step_ms_dense": round(step_d * 1e3, 3),
+            "step_ms_gated": round(step_g * 1e3, 3),
+            "step_ms_delta": round((step_g - step_d) * 1e3, 3),
+            "gate_counts": gates,
+            "wire_bytes_per_step": {"dense_engine": per_d,
+                                    "gated_engine": per_g},
+            "collective_bytes": {"dense": int(bytes_d),
+                                 "gated": int(bytes_g)},
+            "collective_bytes_reduction": round(
+                1.0 - bytes_g / bytes_d, 4) if bytes_d else 0.0,
+            "token_match_rate": round(n_match / max(1, len(div)), 4),
+            "divergence_points": div,
+            "prefill_logits_rel_l2": round(rel_l2, 6),
         })
     return out
 
@@ -656,6 +806,18 @@ def main():
                          "(cache_spec '+pallas' suffix) per cache mode, on a "
                          "single device, with token-match and compile-once "
                          "asserts (CPU runs the kernel in interpret mode)")
+    ap.add_argument("--compress", type=int, default=0,
+                    help="1: also compare dense vs gated-compressed mixed "
+                         "serving (per-step composition gating between the "
+                         "pre-compiled dense and MX-compressed mixed "
+                         "programs) per cache mode, reporting step-time "
+                         "delta, collective wire bytes, and decode-quality "
+                         "drift (greedy divergence point + prefill logits "
+                         "rel-L2) vs the dense reference")
+    ap.add_argument("--overlap-chunks", type=int, default=1,
+                    help="feature-dim chunk count for the compressed "
+                         "collectives' two-stage quantize/transmit overlap "
+                         "(Flash Communication); 1 = unchunked")
     ap.add_argument("--single-device", action="store_true",
                     help="skip the host mesh (no real collectives)")
     ap.add_argument("--seed", type=int, default=0,
@@ -703,6 +865,9 @@ def main():
               "records": records}
     if args.token_budget is not None:
         result["step_modes"] = compare_step_modes(model, params, mesh, args)
+    if args.compress:
+        result["compression_modes"] = compare_compression_modes(
+            model, params, mesh, args)
     if args.prefill_chunk is not None:
         result["prefill_modes"] = compare_prefill_modes(model, params, mesh,
                                                         args)

@@ -61,6 +61,40 @@ def _variant_downgrade(reason: str, strict: bool, key: tuple = ()) -> None:
         warnings.warn(msg, RuntimeWarning, stacklevel=3)
 
 
+def _overlap_chunks(f: int, spec: MXSpec, requested: int) -> int:
+    """Largest chunk count <= ``requested`` that splits a feature dim of
+    ``f`` into equal block-aligned chunks.
+
+    MX quantization is per-block independent, so any block-aligned split
+    produces bit-identical codes to the unchunked codec — chunking changes
+    the schedule (quantize/transmit overlap), never the values. Degrades to
+    1 (unchunked) rather than erroring when ``f`` doesn't divide."""
+    n = max(1, int(requested))
+    while n > 1 and (f % n != 0 or (f // n) % spec.block_size != 0):
+        n -= 1
+    return n
+
+
+def _quantize_staged(x: jnp.ndarray, spec: MXSpec, quantize, n_chunks: int):
+    """Stage 1 of the two-stage pipeline: quantize every feature chunk
+    before any collective is issued, so XLA's async all-gather can overlap
+    chunk k's transfer with chunk k+1's (already traced) quantize work."""
+    if n_chunks == 1:
+        return [x], [quantize(x, spec)]
+    chunks = jnp.split(x, n_chunks, axis=-1)
+    return chunks, [quantize(c, spec) for c in chunks]
+
+
+def _gather_staged(comps, axis_name: str):
+    """Stage 2: issue every chunk's payload+scales all-gather pair, in
+    payload-then-scales order per chunk (the static auditor pairs uint8
+    collectives by equation order)."""
+    return [
+        (lax.all_gather(c.payload, axis_name), lax.all_gather(c.scales, axis_name))
+        for c in comps
+    ]
+
+
 def _codec(use_pallas: bool):
     """Return (quantize, dequantize) implementations.
 
@@ -81,30 +115,44 @@ def compressed_all_gather(
     spec: MXSpec,
     *,
     use_pallas: bool = False,
+    overlap_chunks: int = 1,
 ) -> jnp.ndarray:
     """All-gather ``x`` (leading axis stacked) in compressed form.
 
     Returns the dequantized gathered tensor of shape (axis_size, *x.shape).
+
+    overlap_chunks > 1 selects the chunked two-stage variant (Flash
+    Communication, arxiv 2412.04964): the feature dim is split into
+    block-aligned chunks, every chunk is quantized up front, then the
+    per-chunk gathers are issued back to back so the transfer of chunk k
+    overlaps the quantize/dequantize compute of its neighbours. Chunking is
+    bit-identical to the unchunked codec (MX blocks are independent) and
+    degrades to 1 when the feature dim doesn't split evenly.
     """
     quantize, dequantize = _codec(use_pallas)
-    comp = quantize(x, spec)
-    payload = lax.all_gather(comp.payload, axis_name)
-    scales = lax.all_gather(comp.scales, axis_name)
-    return dequantize(MXCompressed(payload, scales), spec).astype(x.dtype)
+    n_chunks = _overlap_chunks(x.shape[-1], spec, overlap_chunks)
+    chunks, comps = _quantize_staged(x, spec, quantize, n_chunks)
+    wires = _gather_staged(comps, axis_name)
+    outs = [
+        dequantize(MXCompressed(payload, scales), spec)
+        for payload, scales in wires
+    ]
+    out = outs[0] if n_chunks == 1 else jnp.concatenate(outs, axis=-1)
+    return out.astype(x.dtype)
 
 
-def _compressed_psum_fwd(
-    partial: jnp.ndarray,
-    axis_name: str,
+def _gathered_reduce(
+    payload: jnp.ndarray,
+    scales: jnp.ndarray,
+    comp: MXCompressed,
+    chunk: jnp.ndarray,
     spec: MXSpec,
     use_pallas: bool,
     keep_local_fp: bool,
     accum_dtype,
+    dequantize,
 ) -> jnp.ndarray:
-    quantize, dequantize = _codec(use_pallas)
-    comp = quantize(partial, spec)
-    payload = lax.all_gather(comp.payload, axis_name)
-    scales = lax.all_gather(comp.scales, axis_name)
+    """Reduce one chunk's gathered (N-stacked) wire pair to its total."""
     if use_pallas:
         # fused decompress+sum epilogue: one VMEM pass over the shards
         from repro.kernels import ops
@@ -122,10 +170,32 @@ def _compressed_psum_fwd(
             ).astype(accum_dtype)
             return acc + sh
 
-        total = lax.fori_loop(0, n, body, jnp.zeros(partial.shape, accum_dtype))
+        total = lax.fori_loop(0, n, body, jnp.zeros(chunk.shape, accum_dtype))
     if keep_local_fp:
         own_q = dequantize(comp, spec).astype(accum_dtype)
-        total = total - own_q + partial.astype(accum_dtype)
+        total = total - own_q + chunk.astype(accum_dtype)
+    return total
+
+
+def _compressed_psum_fwd(
+    partial: jnp.ndarray,
+    axis_name: str,
+    spec: MXSpec,
+    use_pallas: bool,
+    keep_local_fp: bool,
+    accum_dtype,
+    overlap_chunks: int = 1,
+) -> jnp.ndarray:
+    quantize, dequantize = _codec(use_pallas)
+    n_chunks = _overlap_chunks(partial.shape[-1], spec, overlap_chunks)
+    chunks, comps = _quantize_staged(partial, spec, quantize, n_chunks)
+    wires = _gather_staged(comps, axis_name)
+    totals = [
+        _gathered_reduce(payload, scales, comp, chunk, spec, use_pallas,
+                         keep_local_fp, accum_dtype, dequantize)
+        for (payload, scales), comp, chunk in zip(wires, comps, chunks)
+    ]
+    total = totals[0] if n_chunks == 1 else jnp.concatenate(totals, axis=-1)
     return total.astype(partial.dtype)
 
 
@@ -140,6 +210,7 @@ def compressed_psum(
     variant: str = "gather",
     axis_size: int = 0,
     strict: bool = False,
+    overlap_chunks: int = 1,
 ) -> jnp.ndarray:
     """The paper's compressed reduction for row-parallel TP layers.
 
@@ -157,6 +228,11 @@ def compressed_psum(
     cotangent directly — the quantizer's zero-measure jumps are skipped, and
     no backward collective is needed. (The paper is inference-only; STE makes
     the train_4k shapes train correctly with compression enabled.)
+
+    overlap_chunks: feature-dim chunk count for the gather variant's
+    two-stage quantize/transmit pipeline (see ``compressed_all_gather``).
+    The two_phase variant already splits features per destination and is
+    left unchunked.
     """
     use_two_phase = (
         variant == "two_phase"
@@ -183,7 +259,8 @@ def compressed_psum(
             return _compressed_psum_two_phase(p, axis_name, spec, use_pallas,
                                               accum_dtype)
         return _compressed_psum_fwd(p, axis_name, spec, use_pallas,
-                                    keep_local_fp, accum_dtype)
+                                    keep_local_fp, accum_dtype,
+                                    overlap_chunks=overlap_chunks)
 
     def _fwd(p):
         return _psum(p), None
@@ -290,4 +367,5 @@ def psum_maybe_compressed(
         variant=policy.variant,
         axis_size=axis_size,
         strict=policy.strict_variant,
+        overlap_chunks=policy.overlap_chunks,
     )

@@ -36,6 +36,16 @@ class CompressionPolicy:
     strict_variant: bool = False           # raise (vs warn once) when a
                                            # requested variant can't run and
                                            # would silently downgrade
+    min_prefill_fraction: float = 0.5      # per-step gate: compress a mixed
+                                           # step only when at least this
+                                           # fraction of its REAL tokens are
+                                           # prefill (0.0 => compress any
+                                           # step that clears min_tokens)
+    overlap_chunks: int = 1                # split the compressed payload into
+                                           # this many feature-dim chunks so
+                                           # chunk k+1's quantize overlaps
+                                           # chunk k's transfer (Flash
+                                           # Communication); 1 = unchunked
 
     @property
     def enabled(self) -> bool:
@@ -43,6 +53,21 @@ class CompressionPolicy:
 
     def active_for(self, n_tokens: int) -> bool:
         return self.enabled and self.compress_tp_reduce and n_tokens >= self.min_tokens
+
+    def active_for_step(self, n_prefill: int, n_decode: int) -> bool:
+        """Per-step gate on the mixed batch's REAL composition.
+
+        ``n_prefill``/``n_decode`` are real (valid) token counts, not the
+        padded token budget — a budget-sized batch with one live prefill
+        token must not trip the prefill gate. A step compresses when its
+        real token count clears ``min_tokens`` AND prefill tokens make up at
+        least ``min_prefill_fraction`` of them (decode-dominated steps stay
+        dense: one-token payloads are codec-overhead-bound and decode is
+        where quantization drift compounds)."""
+        n_real = n_prefill + n_decode
+        if not self.active_for(n_real):
+            return False
+        return n_prefill >= self.min_prefill_fraction * n_real
 
     def with_spec(self, spec: Optional[MXSpec]) -> "CompressionPolicy":
         return dataclasses.replace(self, spec=spec)

@@ -82,6 +82,15 @@ class TPContext:
             return None
         return NamedSharding(self.mesh, P(*spec))
 
+    def without_compression(self) -> "TPContext":
+        """The dense gate variant of this context: identical distribution,
+        uncompressed collectives. The serving engine compiles the mixed
+        program once per gate variant (this ctx and the compressed one) and
+        dispatches per step on the batch's real composition."""
+        if not self.policy.enabled:
+            return self
+        return dataclasses.replace(self, policy=NO_COMPRESSION)
+
 
 def constrain(ctx: TPContext, x: jnp.ndarray, *spec) -> jnp.ndarray:
     """with_sharding_constraint that is a no-op without a mesh and silently

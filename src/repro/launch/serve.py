@@ -22,6 +22,14 @@ prefill chunks plus every decode token — into ONE program dispatch
 (default ``prefill_chunk + slots``; 0 keeps the split chunk-then-decode
 scheduler for comparison).
 
+``--min-prefill-fraction`` / ``--overlap-chunks`` tune the per-step
+compression gate (DESIGN.md §Gating): under an active policy the mixed
+engine compiles a dense and a compressed variant of its step program and
+dispatches per step on the batch's real composition — compressed when
+prefill tokens clear the fraction gate, dense otherwise. ``--overlap-chunks``
+splits each compressed payload along the feature dim into a two-stage
+quantize/gather pipeline (bit-identical to unchunked).
+
 ``--prefix-cache 1`` turns on automatic prefix caching (docs/serving.md):
 requests whose prompts share a prefix (system prompts, few-shot templates)
 map the shared KV blocks by reference instead of recomputing prefill —
@@ -64,6 +72,17 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--policy", default="mx", choices=["mx", "none"])
     ap.add_argument("--variant", default="gather", choices=["gather", "two_phase"])
+    ap.add_argument("--min-prefill-fraction", type=float, default=0.5,
+                    help="per-step compression gate: a mixed step dispatches "
+                         "the compressed program variant only when at least "
+                         "this fraction of its REAL (non-padding) tokens are "
+                         "prefill (0.0 = compress any step clearing the "
+                         "policy's min_tokens; DESIGN.md §Gating)")
+    ap.add_argument("--overlap-chunks", type=int, default=1,
+                    help="split each compressed collective payload into this "
+                         "many feature-dim chunks so chunk k+1's quantize "
+                         "overlaps chunk k's transfer (two-stage gather; 1 = "
+                         "unchunked, bit-identical results either way)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--cache-spec", default="bf16",
@@ -122,7 +141,9 @@ def main():
     model = Model(cfg)
 
     policy = NO_COMPRESSION if args.policy == "none" else CompressionPolicy(
-        spec=MXSpec.make("fp4_e2m1", 32, "e8m0"), variant=args.variant)
+        spec=MXSpec.make("fp4_e2m1", 32, "e8m0"), variant=args.variant,
+        min_prefill_fraction=args.min_prefill_fraction,
+        overlap_chunks=args.overlap_chunks)
     n_dev = len(jax.devices())
     mesh = make_host_mesh() if n_dev > 1 else None
     ctx = make_context(mesh, None, policy=policy)
@@ -210,6 +231,9 @@ def main():
     print(f"dispatch: {s['n_steps']} steps, {s['n_dispatches']} program "
           f"dispatches, {s['tokens_per_step_mean']:.1f} tokens/step "
           f"({s['prefill_tokens']} prefill + {s['decode_tokens']} decode)")
+    if "compressed" in engine.gate_variants():
+        print(f"compression gate: {s['n_compressed_steps']} compressed / "
+              f"{s['n_steps'] - s['n_compressed_steps']} dense steps")
     if engine.prefix_cache:
         print(f"prefix cache: {s['prefill_tokens_skipped']} prompt tokens "
               f"skipped (hit rate {s['prefix_hit_rate']:.2f})")

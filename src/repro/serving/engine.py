@@ -3,8 +3,13 @@
 This is the deployment surface the paper profiles: prefill is where the
 compressed TP collectives pay off; decode is policy-gated to uncompressed
 (paper §5.2/A100 finding: codec overhead loses when payloads are small).
+In the unified mixed step that gate is PER STEP: the engine compiles one
+mixed program per gate variant (compressed / dense — same shapes, different
+collectives) and dispatches the variant matching each step's REAL token
+composition via ``CompressionPolicy.active_for_step`` (prefill-dominated
+steps take the compressed wire, decode-dominated steps stay dense).
 Architecture, invariants, and the compression gating between prefill and
-decode are documented in DESIGN.md.
+decode are documented in DESIGN.md §Gating.
 
 Prefill is CHUNKED by default (Sarathi-style token-budget scheduling), and
 for pure-attention text archs the whole step is ONE program: every engine
@@ -32,8 +37,10 @@ Shape-stability contract: the batched decode step always runs over all
 ``max_slots`` slots and the chunk program's shapes are independent of prompt
 length, so requests joining and leaving mid-flight never trigger
 recompilation — ``decode_cache_size()`` and ``prefill_cache_size()`` both
-stay at 1 for a whole run (prefix-cache hits only edit the host-side block
-table, never program shapes).
+stay at one compiled program per gate variant for a whole run (one for a
+dense engine, two — compressed + dense — under an active policy;
+prefix-cache hits only edit the host-side block table, never program
+shapes).
 """
 from __future__ import annotations
 
@@ -42,7 +49,7 @@ import collections
 import dataclasses
 import math
 import time
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -387,6 +394,14 @@ class Engine:
         # decode moves one token per slot, so it defaults to plain psum
         self.ctx_decode = ctx if compress_decode else dataclasses.replace(
             ctx, policy=NO_COMPRESSION)
+        # per-step gate for the unified mixed program: active_for_step runs
+        # on the batch's REAL (valid) token counts, not the padded budget.
+        # compress_decode lifts the prefill-fraction requirement so decode-
+        # dominated mixed steps compress too (its split-path meaning).
+        self._gate_policy = (dataclasses.replace(ctx.policy,
+                                                 min_prefill_fraction=0.0)
+                             if compress_decode else ctx.policy)
+        self.gate_counts = {"compressed": 0, "dense": 0}
 
         donate = (2,) if donate_cache else ()
         self._insert_donate = (0,) if donate_cache else ()
@@ -427,21 +442,31 @@ class Engine:
                     model.prefill_chunk(ctx, p, toks, state, row, start,
                                         n_valid, cache_spec=cache_spec),
                 donate_argnums=(2,) if donate_cache else ())
-        # the unified mixed-batch program: the whole step's work (packed
-        # prefill chunks + the decode batch) in ONE dispatch. Runs under the
-        # PREFILL context — its collective payloads are budget-sized, the
-        # large-payload regime where the paper's codec pays — and compiles
-        # exactly once (shapes fixed by token_budget / n_slots / max_blocks).
-        self._mixed_fn = None
+        # the unified mixed-batch programs: the whole step's work (packed
+        # prefill chunks + the decode batch) in ONE dispatch, compiled once
+        # PER GATE VARIANT. Under an active policy the engine holds a
+        # compressed variant (built under ctx — budget-sized payloads, the
+        # large-payload regime where the paper's codec pays) and a dense
+        # variant (ctx.without_compression() — identical shapes, plain
+        # psum); _step_mixed picks the variant from the step's REAL token
+        # composition (CompressionPolicy.active_for_step). No shape changes,
+        # no recompiles: shapes stay fixed by token_budget/n_slots/
+        # max_blocks. A dense policy keeps the single dense variant.
+        self._gate_ctxs: Dict[bool, TPContext] = {}
+        self._mixed_fns: Dict[bool, Any] = {}
         if self.token_budget:
-            self._mixed_fn = jax.jit(
-                lambda p, toks, state, slot_ids, positions, valid, is_dec,
-                       starts, tables, sample_idx:
-                    model.mixed_step(ctx, p, toks, state, slot_ids,
-                                     positions, valid, is_dec, starts,
-                                     tables, sample_idx,
-                                     cache_spec=cache_spec),
-                donate_argnums=(2,) if donate_cache else ())
+            self._gate_ctxs[False] = ctx.without_compression()
+            if ctx.policy.enabled and ctx.policy.compress_tp_reduce:
+                self._gate_ctxs[True] = ctx
+            for gate, gctx in self._gate_ctxs.items():
+                self._mixed_fns[gate] = jax.jit(
+                    lambda p, toks, state, slot_ids, positions, valid,
+                           is_dec, starts, tables, sample_idx, _ctx=gctx:
+                        model.mixed_step(_ctx, p, toks, state, slot_ids,
+                                         positions, valid, is_dec, starts,
+                                         tables, sample_idx,
+                                         cache_spec=cache_spec),
+                    donate_argnums=(2,) if donate_cache else ())
         # copy-on-write block fork (prefix caching): duplicate one block's
         # bytes in every attention layer's K/V pool so a slot that must
         # rewrite inside a shared tail block writes into a private copy.
@@ -498,27 +523,36 @@ class Engine:
 
     def decode_cache_size(self) -> int:
         """Compiled-variant count of the program that advances decode (jit-
-        stability witness: stays 1 however requests arrive and leave). In
-        mixed mode that program IS the unified step."""
-        if self._mixed_fn is not None:
-            return self._mixed_fn._cache_size()
+        stability witness: stays at 1 per gate variant however requests
+        arrive and leave — 1 for a dense engine, ``len(gate_variants())``
+        under an active policy). In mixed mode that program IS the unified
+        step, summed over its gate variants."""
+        if self._mixed_fns:
+            return sum(fn._cache_size() for fn in self._mixed_fns.values())
         return self._decode._cache_size()
 
     def prefill_cache_size(self) -> int:
         """Compiled-variant count of the serving-path prefill program
         (mirror of ``decode_cache_size``). In mixed mode this counts the
-        single unified step program; with split chunked prefill, the single
-        chunk program — both stay 1 across any mix of prompt lengths. On
-        the whole-prompt path it sums the per-bucket programs (what the
-        chunk program exists to collapse). ``measure_ttft``'s bucketed
-        probes are excluded: they always go through the whole-prompt path
-        and are not part of serving."""
-        if self._mixed_fn is not None:
-            return self._mixed_fn._cache_size()
+        unified step programs (one per gate variant); with split chunked
+        prefill, the single chunk program — both stay fixed across any mix
+        of prompt lengths. On the whole-prompt path it sums the per-bucket
+        programs (what the chunk program exists to collapse).
+        ``measure_ttft``'s bucketed probes are excluded: they always go
+        through the whole-prompt path and are not part of serving."""
+        if self._mixed_fns:
+            return sum(fn._cache_size() for fn in self._mixed_fns.values())
         if self._chunk_fn is not None:
             return self._chunk_fn._cache_size()
         return self._evicted_prefill_compiles + sum(
             fns[0]._cache_size() for fns in self._prefill_fns.values())
+
+    def gate_variants(self) -> List[str]:
+        """Names of the compiled mixed-step gate variants this engine
+        dispatches between ("dense" always; "compressed" when the policy is
+        active). Empty for split-scheduler engines (no mixed program)."""
+        return [("compressed" if g else "dense")
+                for g in sorted(self._mixed_fns)]
 
     def kv_pool_bytes(self) -> int:
         """Device bytes held by this engine's attention KV pools (payload +
@@ -952,14 +986,21 @@ class Engine:
                    for s in decoding],
             self.token_budget, self.n_slots)
 
-        logits, self._state = self._mixed_fn(
+        # per-step compression gate on the batch's REAL composition
+        # (n_prefill/n_decode count valid tokens, never padding): dispatch
+        # the pre-compiled variant; no shape changes, so no recompile
+        gate = (True in self._mixed_fns
+                and self._gate_policy.active_for_step(batch.n_prefill,
+                                                      batch.n_decode))
+        logits, self._state = self._mixed_fns[gate](
             self.params, jnp.asarray(batch.tokens), self._state,
             jnp.asarray(batch.slot_ids), jnp.asarray(batch.positions),
             jnp.asarray(batch.valid), jnp.asarray(batch.is_decode),
             jnp.asarray(self._lengths), jnp.asarray(self._tables),
             jnp.asarray(batch.sample_idx))
+        self.gate_counts["compressed" if gate else "dense"] += 1
         self.stats.record_step(batch.n_prefill, batch.n_decode,
-                               n_dispatches=1)
+                               n_dispatches=1, compressed=gate)
 
         # one sample over all slots; non-sampling rows are garbage/discarded
         temps = np.zeros((self.n_slots,), np.float32)
@@ -1282,6 +1323,7 @@ class Engine:
             self._reset()
         self._ran = True
         self.stats = ServeStats()
+        self.gate_counts = {"compressed": 0, "dense": 0}
         self._key = jax.random.PRNGKey(seed)
         self._t0 = time.perf_counter()
         works = []
@@ -1442,7 +1484,7 @@ class Engine:
         traces = {}
 
         def trace(name, fn, args, *, ctx, n_tokens, is_step,
-                  outs="logits+state"):
+                  outs="logits+state", prefill_dominated=False):
             jaxpr, out = jax.make_jaxpr(fn, return_shape=True)(*args)
             logits = state_out = None
             if outs == "logits+state":
@@ -1460,7 +1502,8 @@ class Engine:
                 state_out=state_out,
                 retrace=lambda: jax.make_jaxpr(fn)(*args),
                 pool_avals=pool_avals,
-                kernel_read_path=self.cache_spec.use_pallas)
+                kernel_read_path=self.cache_spec.use_pallas,
+                prefill_dominated=prefill_dominated)
 
         model, cache_spec = self.model, self.cache_spec
         tables = sds((self.n_slots, self.max_blocks), i32)
@@ -1483,17 +1526,34 @@ class Engine:
                   ctx=self.ctx, is_step=True,
                   n_tokens=self._wire_tokens(1, self.prefill_chunk, self.ctx))
 
-        if self._mixed_fn is not None:
+        if self._mixed_fns:
             T = self.token_budget
-            trace("mixed",
-                  lambda p, t, s, sid, pos, va, dec, st, tb, si:
-                      model.mixed_step(self.ctx, p, t, s, sid, pos, va, dec,
-                                       st, tb, si, cache_spec=cache_spec),
-                  (self.params, sds((1, T), i32), state_in, sds((T,), i32),
-                   sds((T,), i32), sds((T,), b8), sds((T,), b8), lengths,
-                   tables, sds((self.n_slots,), i32)),
-                  ctx=self.ctx, is_step=True,
-                  n_tokens=self._wire_tokens(1, T, self.ctx))
+            mixed_args = (self.params, sds((1, T), i32), state_in,
+                          sds((T,), i32), sds((T,), i32), sds((T,), b8),
+                          sds((T,), b8), lengths, tables,
+                          sds((self.n_slots,), i32))
+            # one trace per gate variant. "mixed" is the variant that serves
+            # prefill-dominated steps (the compressed one when the policy is
+            # active) — it carries prefill_dominated=True so the auditor's
+            # missing-compression rule can demand the thesis be PRESENT.
+            # n_tokens is the trace-time (padded) count: it describes what
+            # the compiled program does; the REAL-count gate runs host-side
+            # in _step_mixed by choosing between these variants.
+            for name, gate in [("mixed", max(self._gate_ctxs)),
+                               ("mixed-dense", False)]:
+                if name == "mixed-dense" and True not in self._gate_ctxs:
+                    break  # single-variant engine: "mixed" already covers it
+                gctx = self._gate_ctxs[gate]
+                trace(name,
+                      lambda p, t, s, sid, pos, va, dec, st, tb, si,
+                             _ctx=gctx:
+                          model.mixed_step(_ctx, p, t, s, sid, pos, va, dec,
+                                           st, tb, si,
+                                           cache_spec=cache_spec),
+                      mixed_args,
+                      ctx=gctx, is_step=True,
+                      n_tokens=self._wire_tokens(1, T, gctx),
+                      prefill_dominated=(name == "mixed"))
 
         if self._cow_fn is not None:
             trace("cow", self._cow_impl,

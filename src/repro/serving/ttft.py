@@ -205,6 +205,9 @@ class ServeStats:
         self.n_steps = 0
         self.n_dispatches = 0
         self.step_tokens: List[tuple] = []  # (n_prefill, n_decode) per step
+        # steps served through the COMPRESSED mixed-program gate variant
+        # (per-step composition gating; dense steps are n_steps - this)
+        self.n_compressed_steps = 0
         # prompt tokens processed outside budgeted steps (whole-prompt
         # prefill at admission)
         self.off_step_prefill_tokens = 0
@@ -213,14 +216,17 @@ class ServeStats:
         self.timings.append(t)
 
     def record_step(self, n_prefill: int, n_decode: int,
-                    n_dispatches: int = 1) -> None:
+                    n_dispatches: int = 1, compressed: bool = False) -> None:
         """One engine step: ``n_prefill`` prompt tokens + ``n_decode``
         decode tokens processed through ``n_dispatches`` device programs
         (1 for the unified mixed step; up to 2 — chunk + decode — for the
-        split scheduler)."""
+        split scheduler). ``compressed`` marks a step dispatched through
+        the compressed gate variant of the mixed program."""
         self.n_steps += 1
         self.n_dispatches += n_dispatches
         self.step_tokens.append((n_prefill, n_decode))
+        if compressed:
+            self.n_compressed_steps += 1
 
     def record_dispatch(self, n: int = 1, prefill_tokens: int = 0) -> None:
         """Off-step program dispatches (whole-prompt prefill + insert at
@@ -239,6 +245,7 @@ class ServeStats:
         self.n_steps += other.n_steps
         self.n_dispatches += other.n_dispatches
         self.step_tokens.extend(other.step_tokens)
+        self.n_compressed_steps += other.n_compressed_steps
         self.off_step_prefill_tokens += other.off_step_prefill_tokens
 
     def summary(self) -> Dict[str, float]:
@@ -259,6 +266,8 @@ class ServeStats:
           accounting: engine steps, device programs dispatched, and the
           packed token mix (the mixed token-budget step dispatches ONE
           program per step where the split scheduler paid two).
+        - ``n_compressed_steps`` — steps dispatched through the compressed
+          mixed-program gate variant (per-step composition gating).
         - ``n_preemptions`` — evict-and-recompute round trips.
         - ``prefill_tokens_skipped`` — prompt tokens served from shared
           prefix-cache blocks instead of recomputed; ``prefix_hit_rate``
@@ -305,6 +314,7 @@ class ServeStats:
             "n_inter_token_samples": len(gaps),
             "n_steps": self.n_steps,
             "n_dispatches": self.n_dispatches,
+            "n_compressed_steps": self.n_compressed_steps,
             "tokens_per_step_mean": (step_total / self.n_steps
                                      if self.n_steps else 0.0),
             "prefill_tokens": (sum(p for p, _ in self.step_tokens)

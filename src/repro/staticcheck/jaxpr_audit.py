@@ -17,6 +17,14 @@ Rules (each owns a ``Finding.rule`` id; DESIGN.md §Static analysis):
   bf16 all-gather silently reappearing in the hot path).
 - ``wire-shape`` — compressed traffic must be uint8 payload+scale pairs
   whose shapes match ``wire_arrays_shape`` for the policy's spec.
+- ``missing-compression`` — the inverse of ``dense-collective``: a program
+  marked ``prefill_dominated`` (the gate variant the engine dispatches for
+  prefill-heavy mixed steps) whose active policy compresses the boundary
+  must actually CARRY uint8 wire traffic over the TP axis. The thesis has
+  to be *present*, not merely not-violated — this is the rule that turns
+  red when the mixed hot path silently regresses to dense collectives
+  (the PR-5-era gap where the unified step ran under whatever ctx it was
+  traced with and nobody noticed the compression was gone).
 - ``dtype-drift`` — program boundaries hold their contract dtypes: logits
   come out at the model compute dtype (no silent f32/weak-type upcast
   escaping an fp4/bf16 path), the KV state pytree leaves the program with
@@ -188,6 +196,28 @@ def _check_compressed_wire(trace: ProgramTrace, tp_records: List[CollectiveRecor
                 f"{want_payload}/{want_scales}"))
 
 
+def _check_compression_present(trace: ProgramTrace,
+                               tp_records: List[CollectiveRecord],
+                               findings: List[Finding]) -> None:
+    """Inverse rule: a prefill-dominated program under an active policy must
+    put compressed bytes on the wire. ``dense-collective`` only fires when a
+    dense float collective is *present*; this rule fires when the uint8 wire
+    pair is *absent* — together they make the compression contract
+    two-sided. Only applies when the program has TP collectives at all
+    (mesh-less engines have nothing to compress)."""
+    if not (trace.prefill_dominated and tp_records):
+        return
+    if any(r.dtype == "uint8" for r in tp_records):
+        return
+    findings.append(Finding(
+        "missing-compression", trace.name,
+        f"prefill-dominated program under active policy "
+        f"({trace.policy.spec.name}, n_tokens={trace.n_tokens}) has TP "
+        f"collectives {[(r.primitive, r.dtype) for r in tp_records]} but no "
+        f"uint8 wire traffic — the paper's compressed collective is absent "
+        f"from the hot path"))
+
+
 def _aval_sig(tree: Any) -> List[Tuple[Tuple[int, ...], str]]:
     return [(tuple(l.shape), str(l.dtype)) for l in jax.tree_util.tree_leaves(tree)]
 
@@ -281,6 +311,7 @@ def audit_program(trace: ProgramTrace) -> ProgramReport:
                     and trace.policy.active_for(trace.n_tokens))
     if expected:
         _check_compressed_wire(trace, tp_records, findings)
+        _check_compression_present(trace, tp_records, findings)
     _check_dtype_drift(trace, findings)
     _check_host_transfer(trace, findings)
     _check_pool_gather(trace, findings)

@@ -79,6 +79,11 @@ class ProgramTrace:
     pool_avals: Tuple[Tuple[Tuple[int, ...], str], ...] = ()
     kernel_read_path: bool = False      # cache_spec.use_pallas: reads must be
                                         # gather-free (kernels/paged_attention)
+    prefill_dominated: bool = False     # this program serves prefill-dominated
+                                        # steps: under an active policy the
+                                        # compressed wire must be PRESENT
+                                        # (missing-compression rule), not just
+                                        # not-violated
 
 
 @dataclasses.dataclass

@@ -68,6 +68,41 @@ def test_two_phase_variant_close_to_gather():
     """)
 
 
+def test_overlap_chunks_bit_identical_and_still_u8():
+    """The chunked two-stage gather (policy.overlap_chunks > 1) reorders the
+    quantize/transmit schedule, never the values: MX blocks are independent
+    and chunk boundaries are block-aligned, so results are BIT-identical to
+    the unchunked collective, the wire stays uint8, and a non-divisible
+    request degrades to the largest feasible chunk count rather than
+    changing semantics."""
+    run_case("""
+    from repro.core.collectives import _overlap_chunks
+    ys = {}
+    for n in (1, 2, 4):
+        pol = dataclasses.replace(PAPER_DEFAULT, overlap_chunks=n)
+        ctx = TPContext(mesh=mesh, policy=pol)
+        with set_mesh(mesh):
+            ys[n] = jax.jit(lambda x, w: row_linear(ctx, x, w))(xs, w)
+    assert 0.0 < rel(ys[1], yl) < 0.2  # the codec really ran
+    np.testing.assert_array_equal(np.asarray(ys[2]), np.asarray(ys[1]))
+    np.testing.assert_array_equal(np.asarray(ys[4]), np.asarray(ys[1]))
+    pol4 = dataclasses.replace(PAPER_DEFAULT, overlap_chunks=4)
+    ctx4 = TPContext(mesh=mesh, policy=pol4)
+    with set_mesh(mesh):
+        txt = jax.jit(lambda x, w: row_linear(ctx4, x, w)).lower(xs, w).compile().as_text()
+    gathers = re.findall(r'= (\\S+) all-gather\\(', txt)
+    assert sum(g.startswith("u8[") for g in gathers) >= 4, gathers
+    assert "all-reduce(" not in txt
+    # chunk-count resolution: block-aligned divisor only, floor 1
+    spec = PAPER_DEFAULT.spec  # block 32
+    assert _overlap_chunks(256, spec, 4) == 4
+    assert _overlap_chunks(256, spec, 3) == 2   # 3 !| 256 -> degrade
+    assert _overlap_chunks(256, spec, 8) == 8   # 8*32 == 256 exactly
+    assert _overlap_chunks(96, spec, 4) == 3    # 4 leaves 24 < block
+    assert _overlap_chunks(32, spec, 4) == 1    # single block: unchunked
+    """)
+
+
 def test_hlo_uses_u8_allgather_not_allreduce():
     run_case("""
     ctx = TPContext(mesh=mesh, policy=PAPER_DEFAULT)

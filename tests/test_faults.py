@@ -25,6 +25,7 @@ from repro.serving import (
     ServeStats, SlotExhausted, StepStuck, WireCorruption,
 )
 from tests.conftest import fp32_reduced
+from tests.test_serving_parity import GATED_CTX
 
 CTX = TPContext(mesh=None)
 
@@ -303,6 +304,58 @@ def test_stuck_step_warm_recovery_with_persistent_cache(mp):
     assert all(r.outcome == OUTCOME_OK for r in reqs)
     for a, b in zip(reqs, ref):
         np.testing.assert_array_equal(a.output, b)
+
+
+def test_stuck_step_without_persistent_cache_degrades_to_hard(mp):
+    """A stall leaves the pools physically intact, but without a persistent
+    prefix index (persistent_cache=False) a warm pool is unreachable after
+    reset — recovery must downgrade to HARD, never report warm, and still
+    replay every request token-identically."""
+    cfg, model, params = mp
+    ref = _ref_outputs(cfg, model, params, 2, 16, 8)
+    eng = Engine(model, params, CTX, max_slots=2, max_len=64,
+                 prefix_cache=True,  # per-run index only: not persistent
+                 step_timeout_s=0.05, fault_plan=FaultPlan.parse("stuck@4"))
+    assert eng.persistent_cache is False
+    sup = EngineSupervisor(eng, backoff_s=0.0)
+    reqs = _reqs(cfg, 2, 16, 8)
+    sup.run(reqs)
+    assert len(sup.events) >= 1
+    assert sup.events[0].error == "StepStuck"
+    assert all(e.mode == "hard" for e in sup.events)
+    assert sup.report()["n_warm"] == 0
+    assert all(r.outcome == OUTCOME_OK for r in reqs)
+    for a, b in zip(reqs, ref):
+        np.testing.assert_array_equal(a.output, b)
+
+
+def test_die_during_gated_compressed_serving_recovers_token_identical(mp):
+    """Engine death mid-run under per-step compression gating (DESIGN.md
+    §Gating): the die fault fires at a step the gate dispatches compressed
+    (whole-chunk prefill steps), the supervisor hard-recovers, and the
+    replay both re-engages the compressed variant and lands on tokens
+    identical to an unfaulted gated engine."""
+    cfg, model, params = mp
+    kw = dict(max_slots=2, max_len=64, prefill_chunk=8)  # auto mixed budget
+    ref_eng = Engine(model, params, GATED_CTX, **kw)
+    ref = _reqs(cfg, 2, 24, 8)
+    ref_eng.run(ref)
+    # early steps are whole prefill chunks: the fault step is a gated one
+    assert ref_eng.gate_counts["compressed"] > 0
+    eng = Engine(model, params, GATED_CTX,
+                 fault_plan=FaultPlan.parse("die@2"), **kw)
+    sup = EngineSupervisor(eng, backoff_s=0.0)
+    reqs = _reqs(cfg, 2, 24, 8)
+    sup.run(reqs)
+    assert [e.error for e in sup.events] == ["EngineDead"]
+    assert sup.events[0].mode == "hard"
+    assert all(r.outcome == OUTCOME_OK for r in reqs)
+    for a, b in zip(reqs, ref):
+        np.testing.assert_array_equal(a.output, b.output)
+    # the gate plumbing survives recovery: both variants live, replay gated
+    assert eng.gate_variants() == ["dense", "compressed"]
+    assert eng.gate_counts["compressed"] > 0
+    assert sup.stats.summary()["n_compressed_steps"] > 0
 
 
 def test_supervisor_max_restarts_and_backoff(mp):

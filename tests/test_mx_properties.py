@@ -1,0 +1,127 @@
+"""Codec properties across EVERY element format (not just the paper's picks).
+
+test_mx.py pins the headline specs; this sweep derives a worst-case rel-L2
+bound from each format's own code table and checks the full wire round trip
+(quantize -> pack -> unpack -> dequantize) against it, plus the projection
+property (a round-tripped tensor is a fixed point) and the edge inputs that
+must never poison the wire representation: zeros, NaN, inf, and float32
+denormals.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from tests.hypothesis_compat import given, settings, strategies as st
+
+from repro.core import mx
+from repro.core.formats import ELEMENT_FORMATS, MXSpec
+
+ALL_FORMATS = sorted(ELEMENT_FORMATS)
+BLOCK = 32  # 32 * bits is byte-aligned for every bit width
+
+
+def _spec(fmt: str) -> MXSpec:
+    return MXSpec.make(fmt, BLOCK, "e8m0")
+
+
+def analytic_rel_l2_bound(spec: MXSpec) -> float:
+    """Worst-case tensor rel-L2 from the code table alone.
+
+    Per block, normalized values u = v / 2**shared_exp satisfy
+    max|u| in [2**emax, 2**(emax+1)) when the scale is unclamped, so the
+    block's signal L2 is >= 2**emax. Elementwise:
+
+      - u in a gap [a, b] between positive codes: round-to-nearest error is
+        worst at the midpoint, err/|u| <= (b - a) / (a + b)
+      - u above the top code: err/|u| <= 1 - max_code / 2**(emax+1)
+      - |u| below half the smallest positive code: flushed to 0,
+        err <= pos[0] / 2 per element (absolute, not relative)
+
+    Combining (r = max relative term, flush absolute term over the minimum
+    block signal): rel_l2 <= sqrt(r**2 + B * (pos[0] / (2 * 2**emax))**2).
+    """
+    v = spec.elem.code_values
+    pos = v[v > 0]
+    a, b = pos[:-1], pos[1:]
+    r_gap = float(((b - a) / (a + b)).max()) if len(pos) > 1 else 0.0
+    r_sat = 1.0 - spec.elem.max_value / 2.0 ** (spec.elem.emax + 1)
+    r = max(r_gap, r_sat)
+    flush = float(pos[0]) / (2.0 * 2.0**spec.elem.emax)
+    return float(np.sqrt(r**2 + spec.block_size * flush**2))
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    fmt=st.sampled_from(ALL_FORMATS),
+    log_scale=st.floats(-6, 6),
+)
+@settings(max_examples=80, deadline=None)
+def test_wire_round_trip_within_analytic_bound(seed, fmt, log_scale):
+    spec = _spec(fmt)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, 4 * BLOCK)) * 10**log_scale,
+                    jnp.float32)
+    out = np.asarray(mx.dequantize(mx.quantize(x, spec), spec))
+    xf = np.asarray(x)
+    rel_l2 = np.sqrt((np.square(out - xf)).sum() / np.square(xf).sum())
+    assert rel_l2 <= analytic_rel_l2_bound(spec) + 1e-6, (
+        f"{spec.name}: rel_l2 {rel_l2:.4f} exceeds analytic bound "
+        f"{analytic_rel_l2_bound(spec):.4f}")
+
+
+@pytest.mark.parametrize("fmt", ALL_FORMATS)
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_round_trip_is_a_projection(fmt, seed):
+    """dequantize(quantize(.)) is idempotent: representable values are fixed
+    points of the full wire path, bit for bit."""
+    spec = _spec(fmt)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, 4 * BLOCK)), jnp.float32)
+    once = mx.dequantize(mx.quantize(x, spec), spec)
+    twice = mx.dequantize(mx.quantize(once, spec), spec)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+@pytest.mark.parametrize("fmt", ALL_FORMATS)
+def test_zero_blocks_exact(fmt):
+    spec = _spec(fmt)
+    out = mx.dequantize(mx.quantize(jnp.zeros((3, 2 * BLOCK), jnp.float32),
+                                    spec), spec)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+@pytest.mark.parametrize("fmt", ALL_FORMATS)
+def test_nan_inf_saturate_in_code_space_and_stay_local(fmt):
+    """NaN/inf inputs saturate to valid codes — never a NaN on the wire or in
+    the decoded tensor — and the damage stays inside the offending block:
+    clean blocks round-trip exactly as without them. (An inf input may decode
+    to +-inf via float32 overflow of top_code * 2**max_exp; what is forbidden
+    is NaN poison or cross-block spread.)"""
+    spec = _spec(fmt)
+    rng = np.random.default_rng(0)
+    clean = rng.normal(size=(1, 4 * BLOCK)).astype(np.float32)
+    ref = np.asarray(mx.dequantize(mx.quantize(jnp.asarray(clean), spec),
+                                   spec))
+    for bad in (np.nan, np.inf, -np.inf):
+        dirty = clean.copy()
+        dirty[0, 0] = bad  # poisons block 0 only
+        codes, _ = mx.quantize_codes(jnp.asarray(dirty), spec)
+        assert int(codes.max()) < spec.elem.num_codes, (
+            f"{spec.name}: {bad} produced an out-of-table code")
+        out = np.asarray(mx.dequantize(mx.quantize(jnp.asarray(dirty), spec),
+                                       spec))
+        assert not np.isnan(out).any(), f"{spec.name}: {bad} leaked NaN"
+        np.testing.assert_array_equal(out[0, BLOCK:], ref[0, BLOCK:])
+
+
+@pytest.mark.parametrize("fmt", ALL_FORMATS)
+def test_denormal_inputs_flush_without_nan(fmt):
+    """float32 subnormals sit below the e8m0 scale floor: they must flush
+    toward zero, never produce NaN/inf on the wire."""
+    spec = _spec(fmt)
+    tiny = np.full((1, 2 * BLOCK), 1.4e-45, np.float32)  # min f32 subnormal
+    tiny[0, ::3] = -1e-40
+    out = np.asarray(mx.dequantize(mx.quantize(jnp.asarray(tiny), spec),
+                                   spec))
+    assert np.isfinite(out).all()
+    assert np.abs(out).max() <= 2.0**spec.elem.emax * 2.0**spec.scale.min_exp

@@ -24,7 +24,7 @@ from repro.models.attention import (
     paged_attention_chunk, paged_attention_decode, paged_attention_mixed,
 )
 from repro.models.model import Model
-from repro.serving import Engine, Request, init_paged_state
+from repro.serving import Engine, init_paged_state
 from repro.staticcheck.jaxpr_audit import iter_eqns
 from tests.conftest import fp32_reduced
 
@@ -241,24 +241,6 @@ def test_kernel_path_is_structurally_gather_free(small_model, cache_spec):
 
 
 # ------------------------------------------------------------ engine level
-
-
-@pytest.mark.parametrize("cache_spec", ["bf16", "fp4_e2m1"])
-def test_engine_tokens_identical_with_kernel(small_model, cache_spec):
-    """Same traffic, same tokens: routing reads through the kernel must not
-    change a single sampled token in either cache mode (the kernel reads the
-    same pool bytes the jnp path reads)."""
-    cfg, model, params = small_model
-    mk = lambda: [Request(prompt=(np.arange(7 + 5 * i, dtype=np.int32) * 13)
-                          % cfg.vocab_size,
-                          max_new_tokens=5, arrival_s=0.002 * i)
-                  for i in range(3)]
-    out = {}
-    for suffix in ("", "+pallas"):
-        eng = Engine(model, params, CTX, max_slots=2, max_len=64,
-                     block_size=16, cache_dtype=jnp.float32,
-                     cache_spec=cache_spec + suffix,
-                     prefill_chunk=16, token_budget=18)
-        out[suffix] = [list(r.output) for r in eng.run(mk())]
-        assert eng.decode_cache_size() == 1  # compile-once survives the kernel
-    assert out[""] == out["+pallas"]
+# Engine-level token identity of the +pallas read path (both cache modes,
+# prefix on/off) is covered by the consolidated parity matrix:
+# tests/test_serving_parity.py::test_engine_modes_token_identical.

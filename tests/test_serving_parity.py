@@ -1,0 +1,159 @@
+"""The serving parity matrix, consolidated (DESIGN.md §Mixed step, §Gating).
+
+One sweep pins the engine's token-identity contract across every execution
+mode against the split chunk+decode oracle: the unified mixed program, the
+gather-free Pallas read kernel, and the gated-compressed mixed engine (two
+pre-compiled gate variants, per-step dispatch) — across {bf16, fp4_e2m1}
+storage and {prefix_cache on, off}. Supersedes the per-file parity tests
+that used to live in test_mixed_step.py / test_paged_kernel.py; fault
+recovery tests (test_faults.py) reuse the gated context defined here.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.formats import MXSpec
+from repro.core.policy import NO_COMPRESSION, CompressionPolicy
+from repro.core.tp import TPContext
+from repro.models.model import Model
+from repro.serving import Engine, Request
+from tests.conftest import fp32_reduced
+
+CTX = TPContext(mesh=None)
+# fp4 wire compression enabled; on mesh=None the TP world size is 1 so the
+# codec never touches activations — gate plumbing (two variants, per-step
+# dispatch) runs for real while outputs stay bit-comparable to the oracle.
+GATED_CTX = TPContext(mesh=None, policy=CompressionPolicy(
+    spec=MXSpec.make("fp4_e2m1", 32, "e8m0")))
+
+MODES = ["mixed", "mixed+pallas", "gated"]
+CACHES = ["bf16", "fp4_e2m1"]
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = fp32_reduced("internlm2-1.8b")
+    model = Model(cfg)
+    return cfg, model, model.init_params(jax.random.PRNGKey(0))
+
+
+def parity_traffic(cfg, shared_prefix: bool):
+    """Staggered arrivals, prompt lengths straddling chunk and block
+    boundaries; with ``shared_prefix`` every prompt opens with the same two
+    full blocks so the prefix cache genuinely shares."""
+    base = (np.arange(32, dtype=np.int32) * 13) % cfg.vocab_size
+    reqs = []
+    for i in range(4):
+        tail = (np.arange(3 + 5 * i, dtype=np.int32) * 11 + i) % cfg.vocab_size
+        prompt = np.concatenate([base, tail]) if shared_prefix else \
+            (np.arange(5 + 9 * i, dtype=np.int32) * 11) % cfg.vocab_size
+        reqs.append(Request(prompt=prompt.astype(np.int32),
+                            max_new_tokens=4 + i, arrival_s=0.002 * i))
+    return reqs
+
+
+def make_engine(model, params, *, mode, cache, prefix):
+    kw = dict(max_slots=2, max_len=64, block_size=16,
+              cache_dtype=jnp.float32, prefill_chunk=16,
+              prefix_cache=prefix)
+    if mode == "split":
+        return Engine(model, params, CTX, token_budget=0,
+                      cache_spec=cache, **kw)
+    if mode == "mixed":
+        return Engine(model, params, CTX, token_budget=18,
+                      cache_spec=cache, **kw)
+    if mode == "mixed+pallas":
+        return Engine(model, params, CTX, token_budget=18,
+                      cache_spec=cache + "+pallas", **kw)
+    assert mode == "gated"
+    return Engine(model, params, GATED_CTX, token_budget=18,
+                  cache_spec=cache, **kw)
+
+
+_REFS = {}
+
+
+def reference_outputs(small_model, cache, prefix):
+    """Split-engine oracle outputs, computed once per (cache, prefix)."""
+    key = (cache, prefix)
+    if key not in _REFS:
+        cfg, model, params = small_model
+        eng = make_engine(model, params, mode="split", cache=cache,
+                          prefix=prefix)
+        reqs = parity_traffic(cfg, prefix)
+        eng.run(reqs)
+        _REFS[key] = [list(r.output) for r in reqs]
+    return _REFS[key]
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("prefix", [False, True], ids=["cold", "prefix"])
+@pytest.mark.parametrize("cache", CACHES)
+def test_engine_modes_token_identical(small_model, cache, prefix, mode):
+    """Same traffic, same tokens, every mode: collapsing a step into one
+    program, routing pool reads through the Pallas kernel, or dispatching
+    between the dense/compressed gate variants must not change one sampled
+    token vs the split oracle — even on lossy fp4 pools, where parity is
+    exact by construction (same chunk boundaries, same pool bytes), not
+    merely within codec tolerance."""
+    cfg, model, params = small_model
+    eng = make_engine(model, params, mode=mode, cache=cache, prefix=prefix)
+    reqs = parity_traffic(cfg, prefix)
+    eng.run(reqs)
+    out = [list(r.output) for r in reqs]
+    assert out == reference_outputs(small_model, cache, prefix)
+
+    s = eng.stats.summary()
+    if mode == "gated":
+        # two pre-compiled variants, one dispatch per step, gate counts
+        # conserved and mirrored into the serve stats
+        assert eng.gate_variants() == ["dense", "compressed"]
+        assert eng.prefill_cache_size() == 2
+        assert sum(eng.gate_counts.values()) == s["n_steps"]
+        assert eng.gate_counts["compressed"] > 0  # the gate really fires
+        assert s["n_compressed_steps"] == eng.gate_counts["compressed"]
+    else:
+        # compile-once: exactly one mixed program end to end
+        assert eng.prefill_cache_size() == 1
+        assert eng.decode_cache_size() == 1
+        assert s["n_compressed_steps"] == 0
+    assert s["n_steps"] == s["n_dispatches"]  # one program per step, always
+    if prefix:
+        assert s["prefill_tokens_skipped"] > 0  # the prefix cache engaged
+
+
+# --------------------------------------------------- per-step gate semantics
+
+
+def test_active_for_step_gates_on_real_composition():
+    """The per-step gate reads REAL counts: min_tokens applies to live
+    tokens, and the prefill fraction decides between the variants."""
+    pol = GATED_CTX.policy  # min_tokens=8, min_prefill_fraction=0.5
+    assert pol.active_for_step(8, 0)
+    assert pol.active_for_step(4, 4)        # exactly at the fraction gate
+    assert not pol.active_for_step(3, 5)    # decode-dominated: stay dense
+    assert not pol.active_for_step(1, 0)    # under min_tokens
+    assert not pol.active_for_step(1, 2)
+    anyfrac = dataclasses.replace(pol, min_prefill_fraction=0.0)
+    assert anyfrac.active_for_step(0, 8)    # fraction 0 => token gate only
+    assert not NO_COMPRESSION.active_for_step(100, 0)
+
+
+def test_padding_does_not_trip_prefill_gate(small_model):
+    """Regression: the gate must see the batch's real composition, not the
+    padded token budget. A budget-sized batch (trace-time n_tokens = 18,
+    comfortably over min_tokens) carrying a single live prefill token plus
+    a couple of decode tokens must dispatch the dense variant every step."""
+    cfg, model, params = small_model
+    eng = make_engine(model, params, mode="gated", cache="bf16",
+                      prefix=False)
+    reqs = [Request(prompt=np.asarray([7 + i], np.int32), max_new_tokens=3,
+                    arrival_s=0.002 * i) for i in range(2)]
+    eng.run(reqs)
+    s = eng.stats.summary()
+    assert s["n_steps"] > 0
+    assert eng.gate_counts["compressed"] == 0 and s["n_compressed_steps"] == 0
+    assert eng.gate_counts["dense"] == s["n_steps"]

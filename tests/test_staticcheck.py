@@ -87,12 +87,17 @@ def test_trace_programs_surface(small_model, tp_mesh):
     eng = _tp_engine(model, params, tp_mesh, cache_spec="fp4_e2m1",
                      prefix_cache=True)
     traces = eng.trace_programs()
-    assert set(traces) == {"decode", "mixed", "cow"}
+    # a compressing policy compiles two gate variants; both are traced, and
+    # only the compressed one carries the prefill-dominated expectation
+    assert set(traces) == {"decode", "mixed", "mixed-dense", "cow"}
     assert traces["mixed"].n_tokens == eng.token_budget
+    assert traces["mixed"].prefill_dominated
+    assert not traces["mixed-dense"].prefill_dominated
     assert traces["decode"].n_tokens == eng.n_slots
     # with an explicit prompt_len the whole-prompt pair appears too
     traces = eng.trace_programs(prompt_len=16)
-    assert set(traces) == {"decode", "mixed", "cow", "prefill", "insert"}
+    assert set(traces) == {"decode", "mixed", "mixed-dense", "cow",
+                           "prefill", "insert"}
     # whole-prompt engines trace their serving pair by default
     whole = Engine(model, params, TPContext(mesh=None), max_slots=2,
                    max_len=64, cache_dtype=jnp.float32, prefill_chunk=0)
@@ -155,6 +160,30 @@ def test_dense_collective_under_compressing_policy_is_red(
                for f in fails), fails
     # decode is OUTSIDE the compressed contract: no finding there
     assert not any(f.program == "decode" for f in fails)
+
+
+def test_missing_compression_in_prefill_dominated_program_is_red(
+        small_model, tp_mesh):
+    """The inverse rule (DESIGN.md §Static auditor): the thesis must be
+    PRESENT, not merely not-violated. A prefill-dominated mixed program with
+    TP collectives but zero uint8 wire traffic under an active policy turns
+    the audit red. The engine's own dense gate variant supplies a real
+    all-dense trace: under its own labeling (not prefill-dominated, policy
+    stripped) it is green; relabeled as the prefill-dominated program of an
+    active policy it must fail."""
+    _, model, params = small_model
+    eng = _tp_engine(model, params, tp_mesh, cache_spec="fp4_e2m1")
+    traces = eng.trace_programs()
+    dense = traces["mixed-dense"]
+    assert audit_program(dense).ok
+    mutant = dataclasses.replace(dense, policy=PAPER_DEFAULT,
+                                 prefill_dominated=True)
+    rep = audit_program(mutant)
+    assert not rep.ok
+    assert any(f.rule == "missing-compression" for f in rep.findings), \
+        rep.findings
+    # the compressed variant satisfies the presence rule by construction
+    assert audit_program(traces["mixed"]).ok
 
 
 def test_f32_upcast_in_fp4_path_is_red(monkeypatch):
