@@ -53,6 +53,15 @@ automatic prefix caching off vs on, reporting cold vs warm TTFT, the
 prefill tokens skipped, and the hit rate — with token-match asserts (warm
 outputs identical to the uncached run) in each cache mode.
 
+With ``--long-context 1`` (or ``--shard-pools N``) the run adds the
+capacity-side comparison: replicated vs sequence-sharded paged pools at a
+FIXED per-device HBM budget. Pool capacity is sized so the
+``--hol-prompt-len`` prompt overflows the replicated pools but fits the
+sharded ones at the same bytes per device; the replicated engine must
+refuse it, the sharded engine must serve it (max-prompt ratio ≥ 1.9x at 2
+shards), and a pressure run reports the preemption rate each engine pays —
+with sharded outputs asserted token-identical to replicated.
+
 With ``--chaos 1`` the run adds the fault-tolerance soak: the same Poisson
 traffic once fault-free and once under a deterministic ``--fault-plan``
 (allocator exhaustion, wire corruption, engine death, ...) with supervised
@@ -150,6 +159,15 @@ def run_policy(name, policy, model, params, mesh, args, *,
             "samples": s["n_inter_token_samples"],
         },
         "preemptions": s["n_preemptions"],
+        # cached blocks recycled under pool pressure (0 with the cache off)
+        "evictions": (engine.prefix_index.evicted_blocks
+                      if engine.prefix_index is not None else 0),
+        # capacity peaks: longest resident context and most pool blocks
+        # simultaneously live at any step of the run
+        "max_resident_ctx": engine.max_resident_ctx,
+        "max_resident_blocks": engine.max_resident_blocks,
+        "kv_shards": engine.kv_shards,
+        "kv_pool_bytes_per_device": engine.kv_pool_bytes(per_device=True),
         "prefill_chunk": engine.prefill_chunk,
         "token_budget": engine.token_budget,
         "prefix_cache": engine.prefix_cache,
@@ -555,6 +573,115 @@ def compare_kernel_modes(model, params, args):
     return out
 
 
+def compare_pool_sharding(model, params, args):
+    """Long-context comparison: replicated vs sequence-sharded paged pools
+    at a FIXED per-device HBM budget (DESIGN.md §Sequence-sharded pools),
+    in each requested cache mode.
+
+    Pool capacity is sized so the ``--hol-prompt-len`` prompt does NOT fit
+    the replicated pools but DOES fit the sharded ones at the same bytes
+    per device: the replicated engine must refuse it (``PoolExhausted``),
+    the sharded engine must serve it, and the max-servable-prompt ratio is
+    asserted ≥ the shard count's lower bound (≥ 1.9x at 2 shards — the
+    acceptance line). A pressure run (two concurrent half-capacity
+    requests) then reports the preemption rate each engine pays at that
+    budget, and a shared-prompt run pins token identity: the sharded
+    engine emits exactly the replicated engine's tokens."""
+    from repro.launch.mesh import make_kv_mesh
+    from repro.serving.errors import PoolExhausted
+
+    shards = args.shard_pools or 2
+    if args.single_device or len(jax.devices()) < shards:
+        print(f"\n-- pool sharding: skipped (need {shards} devices) --")
+        return []
+    mesh = make_kv_mesh(kv=shards)
+    ctx_r = make_context(mesh, None, policy=NO_COMPRESSION)
+    ctx_s = make_context(mesh, None, policy=NO_COMPRESSION, kv_axis="kv")
+    bs, new, plen = args.block_size, args.new_tokens, args.hol_prompt_len
+    # size the budget so the long prompt needs MORE blocks than the
+    # replicated pools hold but fits the sharded pools at the same
+    # per-device bytes (shards x the blocks)
+    need = -(-(plen + new) // bs)
+    n_r = need // shards + 1
+    assert n_r - 1 < need <= shards * n_r - 1
+    cap_r, cap_s = (n_r - 1) * bs, (shards * n_r - 1) * bs
+    long_r, long_s = cap_r - new + 1, cap_s - new + 1
+    cache_modes = ["bf16"]
+    if args.cache_spec and KVCacheSpec.parse(args.cache_spec).quantized:
+        cache_modes.append(KVCacheSpec.parse(args.cache_spec).mx.name)
+    print(f"\n-- pool sharding: replicated ({n_r - 1} blocks) vs "
+          f"{shards}-shard ({shards * n_r - 1} blocks) pools at an equal "
+          f"per-device budget (long prompt {plen} tokens) --")
+    rng = np.random.default_rng(args.seed)
+    vocab = model.cfg.vocab_size
+    mk = lambda n, L, nt=new: [Request(prompt=rng.integers(0, vocab, L)
+                                       .astype(np.int32), max_new_tokens=nt)
+                               for _ in range(n)]
+    out = []
+    for cname in cache_modes:
+        def eng(ctx, n_blocks, slots):
+            return Engine(model, params, ctx, max_slots=slots,
+                          max_len=plen + new, block_size=bs,
+                          n_blocks=n_blocks, cache_dtype=jnp.float32,
+                          cache_spec=cname)
+        er = eng(ctx_r, n_r, 1)
+        es = eng(ctx_s, shards * n_r, 1)
+        assert (es.kv_pool_bytes(per_device=True)
+                == er.kv_pool_bytes(per_device=True))
+        assert long_s / long_r >= 1.9, (long_s, long_r)
+        # the sharded engine serves the long prompt; the replicated engine
+        # at the same per-device budget cannot even admit it
+        long_reqs = mk(1, plen)
+        got = es.run([dataclasses.replace(long_reqs[0])])
+        assert got[0].output.shape == (new,)
+        assert es.max_resident_ctx >= plen
+        try:
+            er.run([dataclasses.replace(long_reqs[0])])
+            raise AssertionError(
+                f"[{cname}] replicated pools admitted a {plen}-token "
+                f"prompt past their {cap_r}-position capacity")
+        except PoolExhausted:
+            pass
+        # preemption pressure + token identity: two concurrent requests
+        # whose prompts both fit the replicated pools at admission (with a
+        # little headroom, so neither is serialized behind the other), then
+        # grow past them during decode — the sharded pools absorb the same
+        # growth without evicting
+        press = mk(2, max(1, (n_r - 3) // 2) * bs, 2 * bs)
+        er2, es2 = eng(ctx_r, n_r, 2), eng(ctx_s, shards * n_r, 2)
+        out_r = er2.run([dataclasses.replace(r) for r in press])
+        out_s = es2.run([dataclasses.replace(r) for r in press])
+        for a, b in zip(out_r, out_s):
+            assert np.array_equal(a.output, b.output), (
+                f"[{cname}] sharded pools diverged from replicated")
+        s_r, s_s = er2.stats.summary(), es2.stats.summary()
+        rate = lambda s: s["n_preemptions"] / max(1, s["n_steps"])
+        print(f"  [{cname}] max prompt {long_r} -> {long_s} tokens "
+              f"({long_s / long_r:.2f}x) at "
+              f"{er.kv_pool_bytes(per_device=True) / 1e6:.2f} MB/device; "
+              f"preemptions/step {rate(s_r):.3f} -> {rate(s_s):.3f}; "
+              f"token match: exact")
+        out.append({
+            "cache_mode": cname,
+            "kv_shards": shards,
+            "per_device_pool_bytes": er.kv_pool_bytes(per_device=True),
+            "resident_blocks": {"replicated": n_r - 1,
+                                "sharded": shards * n_r - 1},
+            "max_prompt_len": {"replicated": long_r, "sharded": long_s},
+            "max_prompt_ratio": round(long_s / long_r, 3),
+            "long_prompt_len": plen,
+            "replicated_admits_long_prompt": False,
+            "max_resident_ctx_sharded": es.max_resident_ctx,
+            "preemptions_under_pressure": {
+                "replicated": s_r["n_preemptions"],
+                "sharded": s_s["n_preemptions"]},
+            "preemption_rate": {"replicated": round(rate(s_r), 4),
+                                "sharded": round(rate(s_s), 4)},
+            "token_match_vs_replicated": 1.0,
+        })
+    return out
+
+
 def build_shared_prefix_requests(n, shared_len, prompt_len, new_tokens,
                                  rate_hz, vocab, seed=0):
     """Shared-system-prompt traffic: every prompt opens with the SAME
@@ -796,6 +923,17 @@ def main():
                          "the prefix cache off vs on, in each cache mode "
                          "(pick a multiple of the chunk size for exact "
                          "token-match asserts)")
+    ap.add_argument("--long-context", type=int, default=0,
+                    help="1: also compare replicated vs sequence-sharded "
+                         "paged pools at a FIXED per-device HBM budget — "
+                         "the --hol-prompt-len prompt must be refused by "
+                         "the replicated pools and served by the sharded "
+                         "ones, with preemption-rate and token-match "
+                         "reporting (implied by --shard-pools)")
+    ap.add_argument("--shard-pools", type=int, default=0,
+                    help="kv shard count for the --long-context pool "
+                         "comparison (0 with --long-context 1 picks 2); "
+                         "needs at least this many devices")
     ap.add_argument("--hol-prompt-len", type=int, default=512,
                     help="prompt length for the head-of-line-blocking "
                          "comparison (long enough that a whole-prompt "
@@ -878,6 +1016,8 @@ def main():
                                                       args)
     if args.kernel:
         result["kernel_modes"] = compare_kernel_modes(model, params, args)
+    if args.long_context or args.shard_pools:
+        result["pool_sharding"] = compare_pool_sharding(model, params, args)
     if args.chaos:
         result["chaos_soak"] = chaos_soak(model, params, mesh, args)
     OUT_DIR.mkdir(parents=True, exist_ok=True)

@@ -12,7 +12,10 @@ Runs ``repro.staticcheck`` end to end (DESIGN.md §Static analysis):
    retrace).
 2. With ``--tp-mesh``: the same audit re-run in a subprocess with 8 forced
    host devices on the production-shaped ``data×model`` mesh, where the TP
-   axis size is > 1 and gathered byte counts are real.
+   axis size is > 1 and gathered byte counts are real — and AGAIN on a
+   ``kv×data×model`` mesh with sequence-sharded pools (``kv_shards=2``),
+   where every matrix row additionally arms the ``pool-reshard`` rule (no
+   step program may rebuild a replicated full-capacity pool).
 3. **AST lint** (rules SC001–SC006) over ``src/repro`` + ``scripts``.
 4. **jit static-arg audit** over ``src/repro`` (rule SC004 via the shared
    resolver — every ``static_argnames`` signature derived statically).
@@ -121,6 +124,36 @@ def run_tp_subprocess(arch: str) -> bool:
     return proc.returncode == 0
 
 
+def run_kv_subprocess(arch: str) -> bool:
+    """The full engine matrix again with sequence-sharded pools on a
+    kv(2)×data(2)×model(2) mesh: every traced step program carries
+    ``kv_shards=2``, so the ``pool-reshard`` rule is armed on every row
+    (sharded +pallas and the gated-compressed variants included) and must
+    stay green — the block exchange moves table-sized operands only, never
+    a full-capacity replication."""
+    script = (
+        "import sys; sys.path.insert(0, 'src')\n"
+        "from scripts.static_audit import audit_matrix\n"
+        "from repro import compat\n"
+        "from repro.launch.sharding import make_context\n"
+        "from repro.core.policy import PAPER_DEFAULT\n"
+        "mesh = compat.make_mesh((2, 2, 2), ('kv', 'data', 'model'))\n"
+        "ctx = make_context(mesh, None, policy=PAPER_DEFAULT, kv_axis='kv')\n"
+        f"ok = audit_matrix({arch!r}, mesh, ctx)\n"
+        "sys.exit(0 if ok else 1)\n"
+    )
+    env = dict(os.environ, PYTHONPATH="src",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    print("== jaxpr audit: subprocess kv(2) x data(2) x model(2) mesh "
+          "(sequence-sharded pools) ==\n", flush=True)
+    proc = subprocess.run([sys.executable, "-c", script], env=env, cwd=ROOT,
+                          capture_output=True, text=True)
+    sys.stdout.write(proc.stdout)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stderr[-4000:])
+    return proc.returncode == 0
+
+
 def run_lint() -> bool:
     from repro.staticcheck import lint_paths
 
@@ -155,6 +188,7 @@ def main(argv=None) -> int:
     ok = run_local(args.arch)
     if args.tp_mesh:
         ok &= run_tp_subprocess(args.arch)
+        ok &= run_kv_subprocess(args.arch)
     if not args.skip_lint:
         ok &= run_lint()
         ok &= run_static_args()

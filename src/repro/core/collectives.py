@@ -27,9 +27,36 @@ __all__ = [
     "compressed_psum",
     "compressed_all_gather",
     "compressed_all_to_all",
+    "masked_owner_psum",
     "psum_maybe_compressed",
     "reset_downgrade_warnings",
 ]
+
+
+def masked_owner_psum(
+    x: jnp.ndarray, own: jnp.ndarray, axis_name: str
+) -> jnp.ndarray:
+    """Bit-exact ownership select across a mesh axis.
+
+    Every shard contributes ``x`` rows it owns and zeros elsewhere; the psum
+    reconstructs the full tensor on every shard. ``own`` is a boolean mask
+    broadcastable to ``x`` that must be True on EXACTLY ONE shard per element
+    — then each summand has a single nonzero contributor and the reduction is
+    exact. Float payloads are masked and reduced in the same-width unsigned
+    integer domain (bitcast round-trip), so bf16/fp32 pool blocks and uint8
+    wire bytes all survive the exchange bit-for-bit: the sequence-sharded
+    pool read path moves only table-named blocks in wire format and stays
+    bit-identical to a replicated pool.
+    """
+    dt = jnp.dtype(x.dtype)
+    if dt.kind == "f":
+        u = {2: jnp.uint16, 4: jnp.uint32}[dt.itemsize]
+        xi = lax.bitcast_convert_type(x, u)
+    else:
+        xi = x
+    xi = jnp.where(own, xi, jnp.zeros((), xi.dtype))
+    tot = lax.psum(xi, axis_name)
+    return lax.bitcast_convert_type(tot, dt) if dt.kind == "f" else tot
 
 
 _DOWNGRADE_WARNED: set = set()

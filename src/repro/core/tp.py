@@ -19,10 +19,14 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.collectives import psum_maybe_compressed
+from repro.core.collectives import masked_owner_psum, psum_maybe_compressed
 from repro.core.policy import CompressionPolicy, NO_COMPRESSION
 
-__all__ = ["TPContext", "row_linear", "column_linear", "fused_mlp", "constrain"]
+__all__ = [
+    "TPContext", "row_linear", "column_linear", "fused_mlp", "constrain",
+    "pool_exchange", "pool_scatter", "pool_block_write", "pool_block_fill",
+    "pool_block_copy",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,7 +38,12 @@ class TPContext:
     data_axes: tuple = ("data",)              # batch axes (may include "pod");
                                               # () => batch not sharded
     seq_axis: Optional[str] = None            # shard KV-cache sequence dim
-                                              # (long-context decode)
+                                              # (static prefill path only)
+    kv_axis: Optional[str] = None             # shard paged-pool BLOCK dim:
+                                              # each device owns
+                                              # capacity/kv_shards pool blocks
+                                              # (DESIGN.md §Sequence-sharded
+                                              # pools)
     policy: CompressionPolicy = NO_COMPRESSION
     fuse_mlp_island: bool = False             # perf: column+row in one island
     scan_layers: bool = False                 # lax.scan over repeated layers
@@ -55,6 +64,17 @@ class TPContext:
     @property
     def tp_size(self) -> int:
         return self.mesh.shape[self.axis] if self.tp else 1
+
+    @property
+    def kv_shards(self) -> int:
+        """Number of shards the paged pools' block dim is split into."""
+        if self.mesh is not None and self.kv_axis in self.mesh.axis_names:
+            return self.mesh.shape[self.kv_axis]
+        return 1
+
+    @property
+    def kv_sharded(self) -> bool:
+        return self.kv_shards > 1
 
     @property
     def batch(self):
@@ -285,3 +305,201 @@ def fused_mlp(
         axis_names=names,
         check_vma=False,
     )(x, *args)
+
+
+# --------------------------------------------------------------------------
+# Sequence-sharded paged pools (DESIGN.md §Sequence-sharded pools).
+#
+# The pools keep their GLOBAL logical shape (n_blocks, block, width); only
+# the physical layout splits the block dim contiguously over ctx.kv_axis.
+# Ownership is a pure function of the global block id:
+#
+#     per_shard = n_blocks // kv_shards
+#     shard_of(g) = g // per_shard          local_of(g) = g % per_shard
+#
+# so pool row == global id and kv_shards == 1 degrades to the replicated
+# layout byte-for-byte. Every island below is manual over EVERY mesh axis
+# (see island_axes: partial-manual islands abort XLA-CPU), reads/writes its
+# (per_shard, block, width_local) slab, and communicates ONLY over the kv
+# axis — table-named blocks via masked_owner_psum on the read side, nothing
+# at all on the write side (non-owners drop their scatter rows).
+# --------------------------------------------------------------------------
+
+
+def _kv_geometry(ctx: TPContext, pool: jnp.ndarray):
+    """(kv axis name, per-shard block count) for a sharded pool array."""
+    assert ctx.kv_sharded, "pool islands require a kv-sharded context"
+    n_blocks = pool.shape[0]
+    assert n_blocks % ctx.kv_shards == 0, (
+        f"pool capacity {n_blocks} does not divide over {ctx.kv_shards} "
+        "kv shards (the engine rounds capacity up at construction)"
+    )
+    return ctx.kv_axis, n_blocks // ctx.kv_shards
+
+
+def _m_entry(ctx: TPContext, dim: int) -> Optional[str]:
+    """TP-axis spec entry for a feature dim — None when it doesn't divide
+    (mirrors ``constrain``'s silent drop; wire scales dims are often tiny)."""
+    if ctx.tp and dim % ctx.tp_size == 0:
+        return ctx.axis
+    return None
+
+
+def pool_exchange(ctx: TPContext, pools, tables: jnp.ndarray):
+    """Gather the table-named blocks of each pool array into a kv-replicated
+    "virtual pool" laid out in table order.
+
+    pools: sequence of (n_blocks, block, width) arrays (dense kv, or wire
+    payload/scales planes). tables: (R, nb) int32 global block ids.
+    Returns a list of (R*nb, block, width) arrays with
+    ``out[i][r*nb + j] == pools[i][tables[r, j]]`` bit-for-bit on every
+    shard. Wire volume per array is len(tables) blocks — bounded by resident
+    context, never pool capacity (the full-pool all-gather the ``pool-reshard``
+    audit rule forbids).
+    """
+    kv, per_shard = _kv_geometry(ctx, pools[0])
+    names = set(ctx.mesh.axis_names)
+    m_entries = [_m_entry(ctx, p.shape[-1]) for p in pools]
+
+    def island(t, *slabs):
+        me = jax.lax.axis_index(kv)
+        flat = t.reshape(-1)
+        own = ((flat // per_shard) == me)[:, None, None]
+        local = flat % per_shard
+        return tuple(
+            masked_owner_psum(slab[local], own, kv) for slab in slabs
+        )
+
+    return list(shard_map(
+        island,
+        mesh=ctx.mesh,
+        in_specs=(P(None, None),) + tuple(P(kv, None, m) for m in m_entries),
+        out_specs=tuple(P(None, None, m) for m in m_entries),
+        axis_names=names,
+        check_vma=False,
+    )(tables, *pools))
+
+
+def _drop_row(kv: str, per_shard: int, blk: jnp.ndarray) -> jnp.ndarray:
+    """Local slab row for owned global ids; ``per_shard`` (out of bounds, so
+    a mode="drop" scatter discards it) for everything this shard doesn't own."""
+    me = jax.lax.axis_index(kv)
+    return jnp.where((blk // per_shard) == me, blk % per_shard, per_shard)
+
+
+def pool_scatter(ctx: TPContext, pools_vals, blk: jnp.ndarray,
+                 offs: jnp.ndarray):
+    """Per-position append into sharded pools: each (pool, vals) pair writes
+    ``vals[i]`` (shape (N, width)) at (blk[i], offs[i]). Communication-free:
+    every shard scatters only the rows it owns and drops the rest."""
+    kv, per_shard = _kv_geometry(ctx, pools_vals[0][0])
+    names = set(ctx.mesh.axis_names)
+    m_entries = [_m_entry(ctx, p.shape[-1]) for p, _ in pools_vals]
+    k = len(pools_vals)
+
+    def island(b, o, *arrs):
+        lb = _drop_row(kv, per_shard, b)
+        return tuple(
+            slab.at[lb, o].set(v, mode="drop")
+            for slab, v in zip(arrs[:k], arrs[k:])
+        )
+
+    pool_specs = tuple(P(kv, None, m) for m in m_entries)
+    val_specs = tuple(P(None, m) for m in m_entries)
+    flat = [p for p, _ in pools_vals] + [v for _, v in pools_vals]
+    return list(shard_map(
+        island,
+        mesh=ctx.mesh,
+        in_specs=(P(None), P(None)) + pool_specs + val_specs,
+        out_specs=pool_specs,
+        axis_names=names,
+        check_vma=False,
+    )(blk, offs, *flat))
+
+
+def pool_block_write(ctx: TPContext, pools_vals, block_ids: jnp.ndarray):
+    """Whole-block write (prefix-cache insert): each (pool, vals) pair writes
+    ``vals`` (shape (n, block, width)) at rows ``block_ids``. Communication-
+    free, same drop discipline as ``pool_scatter``."""
+    kv, per_shard = _kv_geometry(ctx, pools_vals[0][0])
+    names = set(ctx.mesh.axis_names)
+    m_entries = [_m_entry(ctx, p.shape[-1]) for p, _ in pools_vals]
+    k = len(pools_vals)
+
+    def island(b, *arrs):
+        lb = _drop_row(kv, per_shard, b)
+        return tuple(
+            slab.at[lb].set(v, mode="drop")
+            for slab, v in zip(arrs[:k], arrs[k:])
+        )
+
+    pool_specs = tuple(P(kv, None, m) for m in m_entries)
+    val_specs = tuple(P(None, None, m) for m in m_entries)
+    flat = [p for p, _ in pools_vals] + [v for _, v in pools_vals]
+    return list(shard_map(
+        island,
+        mesh=ctx.mesh,
+        in_specs=(P(None),) + pool_specs + val_specs,
+        out_specs=pool_specs,
+        axis_names=names,
+        check_vma=False,
+    )(block_ids, *flat))
+
+
+def pool_block_fill(ctx: TPContext, pools_fills, block: jnp.ndarray):
+    """Fill one block (scalar global id) of each pool array with a constant
+    (fault injection: poisoned wire scales / NaN dense blocks). pools_fills:
+    sequence of (pool, python_scalar) pairs."""
+    kv, per_shard = _kv_geometry(ctx, pools_fills[0][0])
+    names = set(ctx.mesh.axis_names)
+    m_entries = [_m_entry(ctx, p.shape[-1]) for p, _ in pools_fills]
+    fills = [f for _, f in pools_fills]
+
+    def island(b, *slabs):
+        lb = _drop_row(kv, per_shard, b)
+        return tuple(
+            slab.at[lb].set(jnp.full(slab.shape[1:], f, slab.dtype),
+                            mode="drop")
+            for slab, f in zip(slabs, fills)
+        )
+
+    pool_specs = tuple(P(kv, None, m) for m in m_entries)
+    return list(shard_map(
+        island,
+        mesh=ctx.mesh,
+        in_specs=(P(),) + pool_specs,
+        out_specs=pool_specs,
+        axis_names=names,
+        check_vma=False,
+    )(block, *[p for p, _ in pools_fills]))
+
+
+def pool_block_copy(ctx: TPContext, pools, src: jnp.ndarray,
+                    dst: jnp.ndarray):
+    """Copy block ``src`` to block ``dst`` (copy-on-write fork) across
+    shards: the owner of ``src`` broadcasts one block over the kv axis
+    (bit-exact masked psum), the owner of ``dst`` writes it, everyone else
+    drops. One block of wire per pool array."""
+    kv, per_shard = _kv_geometry(ctx, pools[0])
+    names = set(ctx.mesh.axis_names)
+    m_entries = [_m_entry(ctx, p.shape[-1]) for p in pools]
+
+    def island(s, d, *slabs):
+        me = jax.lax.axis_index(kv)
+        src_own = (s // per_shard) == me
+        ld = jnp.where((d // per_shard) == me, d % per_shard, per_shard)
+        outs = []
+        for slab in slabs:
+            data = masked_owner_psum(slab[s % per_shard], src_own, kv)
+            outs.append(slab.at[ld].set(data, mode="drop"))
+        return tuple(outs)
+
+    pool_specs = tuple(P(kv, None, m) for m in m_entries)
+    return list(shard_map(
+        island,
+        mesh=ctx.mesh,
+        in_specs=(P(), P()) + pool_specs,
+        out_specs=pool_specs,
+        axis_names=names,
+        check_vma=False,
+    )(src, dst, *pools))

@@ -43,7 +43,12 @@ NEG_INF = -1e30
 
 
 def _kernel(tables_ref, hist_ref, *refs, spec, kv_heads, head_dim, q_heads,
-            seq_q, block_size, n_blocks, scale, window, has_extra):
+            seq_q, block_size, n_blocks, scale, window, has_extra,
+            has_row_map=False):
+    if has_row_map:
+        # third scalar-prefetch operand (the virtual-region row map) — only
+        # the index maps consume it; the body skips past its ref
+        refs = refs[1:]
     q_ref = refs[0]
     if spec is None:
         k_ref, v_ref = refs[1:3]
@@ -139,6 +144,9 @@ def paged_attention(
     k_extra=None,              # (E, kv_dim) compute-precision in-step keys
     v_extra=None,              # (E, kv_dim)
     t_extra=None,              # (R, E) int32 positions (or broadcastable (1, E))
+    row_map=None,              # (R,) int32 virtual region per row (sharded
+                               #   pools: block j of row r lives at pool row
+                               #   row_map[r] * nb + j, see below)
     *,
     spec: MXSpec | None = None,  # None = dense pools
     kv_heads: int,
@@ -158,6 +166,15 @@ def paged_attention(
     decode (R=B, Sq=1, no extras — the scatter-written token is already in
     the pool), chunk (R=1, Sq=C, extras=the chunk itself), mixed (R=T, Sq=1,
     extras=the flattened step's K/V with the (T, T) same-slot position mask).
+
+    ``row_map`` switches the block-table walk to VIRTUAL-REGION addressing
+    for sequence-sharded pools: the pools are then an exchange buffer of
+    per-region blocks in table order (region r's block j at pool row
+    ``row_map[r] * nb + j`` — the result of resolving each global block id
+    to its (owning shard, local slot) and exchanging exactly those blocks),
+    and the walk streams regions instead of following table ids. With
+    ``row_map=None`` (replicated pools) the walk follows ``tables`` ids —
+    bit-identical geometry either way, so the two modes share one body.
     """
     R, Sq, q_dim = q.shape
     nb = tables.shape[1]
@@ -171,19 +188,35 @@ def paged_attention(
     G = H // kv_heads
     has_extra = k_extra is not None
 
+    has_rm = row_map is not None
+
     # index maps take (grid indices..., *scalar-prefetch refs); pool-block
-    # specs index the pool by the row's table entry — one block DMA per step
-    def _q_map(r, j, tbl, hl):
-        return (r, 0, 0)
+    # specs index the pool by the row's table entry (replicated pools) or by
+    # its virtual region (sharded exchange buffer) — one block DMA per step
+    if has_rm:
+        def _q_map(r, j, tbl, hl, rm):
+            return (r, 0, 0)
 
-    def _blk_map(r, j, tbl, hl):
-        return (tbl[r, j], 0, 0)
+        def _blk_map(r, j, tbl, hl, rm):
+            return (rm[r] * nb + j, 0, 0)
 
-    def _row_map(r, j, tbl, hl):
-        return (r, 0)
+        def _row_map(r, j, tbl, hl, rm):
+            return (r, 0)
 
-    def _whole_map(r, j, tbl, hl):
-        return (0, 0)
+        def _whole_map(r, j, tbl, hl, rm):
+            return (0, 0)
+    else:
+        def _q_map(r, j, tbl, hl):
+            return (r, 0, 0)
+
+        def _blk_map(r, j, tbl, hl):
+            return (tbl[r, j], 0, 0)
+
+        def _row_map(r, j, tbl, hl):
+            return (r, 0)
+
+        def _whole_map(r, j, tbl, hl):
+            return (0, 0)
 
     in_specs = [pl.BlockSpec((1, Sq, q_dim), _q_map)]
     operands = [q]
@@ -212,9 +245,9 @@ def paged_attention(
     kernel = functools.partial(
         _kernel, spec=spec, kv_heads=kv_heads, head_dim=hd, q_heads=H,
         seq_q=Sq, block_size=bs, n_blocks=nb, scale=scale, window=window,
-        has_extra=has_extra)
+        has_extra=has_extra, has_row_map=has_rm)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3 if has_rm else 2,
         grid=(R, nb),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, Sq, q_dim), _q_map),
@@ -224,8 +257,11 @@ def paged_attention(
             pltpu.VMEM((kv_heads, Sq * G, hd), jnp.float32),   # accumulator
         ],
     )
+    prefetch = (tables.astype(jnp.int32), hist_len.astype(jnp.int32))
+    if has_rm:
+        prefetch += (row_map.astype(jnp.int32),)
     return pl.pallas_call(
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((R, Sq, q_dim), out_dtype),
         interpret=interpret,
-    )(tables.astype(jnp.int32), hist_len.astype(jnp.int32), *operands)
+    )(*prefetch, *operands)

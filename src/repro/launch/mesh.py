@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_kv_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,3 +22,19 @@ def make_host_mesh(data: int = 2, model: int = 4):
     while data * model > n and model > 1:
         model //= 2
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_kv_mesh(kv: int = 2, data: int = 2, model: int = 4):
+    """Host mesh with a leading ``kv`` axis for sequence-sharded KV pools
+    (DESIGN.md §Sequence-sharded pools). The kv extent is honored exactly
+    (it sets the pool capacity split the engine is sized around); data and
+    model shrink to fit the available devices."""
+    n = len(jax.devices())
+    if kv > n:
+        raise ValueError(
+            f"--shard-pools {kv} needs at least {kv} devices, have {n}")
+    while kv * data * model > n and data > 1:
+        data //= 2
+    while kv * data * model > n and model > 1:
+        model //= 2
+    return jax.make_mesh((kv, data, model), ("kv", "data", "model"))

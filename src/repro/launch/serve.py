@@ -54,7 +54,7 @@ import numpy as np
 from repro.configs import get_config, reduced_config
 from repro.core.formats import MXSpec
 from repro.core.policy import CompressionPolicy, NO_COMPRESSION
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, make_kv_mesh
 from repro.launch.sharding import make_context
 from repro.models.frontends import audio_frames_stub, patch_embed_stub
 from repro.models.model import Model
@@ -88,6 +88,14 @@ def main():
     ap.add_argument("--cache-spec", default="bf16",
                     help="KV pool storage: 'bf16' (dense) or an MX scheme "
                          "('fp4_e2m1', 'fp5_e2m2_b16_e8m0', ...)")
+    ap.add_argument("--shard-pools", type=int, default=1,
+                    help="shard the paged KV pools' block dim over this many "
+                         "devices on a 'kv' mesh axis (DESIGN.md §Sequence-"
+                         "sharded pools): each device resides 1/N of pool "
+                         "capacity, the block-table walk fetches only the "
+                         "blocks a row attends (never a full-pool gather), "
+                         "and outputs stay token-identical to replicated "
+                         "pools. 1 (default) = replicated")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="prompt tokens prefillable per PREFILLING slot per "
                          "engine step (chunked prefill, interleaved with "
@@ -145,9 +153,14 @@ def main():
         min_prefill_fraction=args.min_prefill_fraction,
         overlap_chunks=args.overlap_chunks)
     n_dev = len(jax.devices())
-    mesh = make_host_mesh() if n_dev > 1 else None
-    ctx = make_context(mesh, None, policy=policy)
-    print(f"devices={n_dev} policy={policy.describe()}")
+    if args.shard_pools > 1:
+        mesh = make_kv_mesh(kv=args.shard_pools)
+        ctx = make_context(mesh, None, policy=policy, kv_axis="kv")
+    else:
+        mesh = make_host_mesh() if n_dev > 1 else None
+        ctx = make_context(mesh, None, policy=policy)
+    print(f"devices={n_dev} policy={policy.describe()}"
+          + (f" kv_shards={ctx.kv_shards}" if ctx.kv_sharded else ""))
 
     params = model.init_params(jax.random.PRNGKey(0))
     max_len = args.prompt_len + args.new_tokens + cfg.n_patches * (
@@ -168,8 +181,13 @@ def main():
             f"({engine.prefill_chunk} tokens/chunk)" if engine.token_budget
             else (f"split, chunked {engine.prefill_chunk} tokens/step"
                   if engine.prefill_chunk else "split, whole-prompt"))
+    pool_mb = engine.kv_pool_bytes() / 1e6
+    sharded = (f"{pool_mb:.2f} MB pools, "
+               f"{engine.kv_pool_bytes(per_device=True) / 1e6:.2f} MB/device "
+               f"over {engine.kv_shards} kv shards"
+               if engine.kv_shards > 1 else f"{pool_mb:.2f} MB pools")
     print(f"kv cache: {engine.cache_spec.describe()} "
-          f"({engine.kv_pool_bytes() / 1e6:.2f} MB pools); step: {step}"
+          f"({sharded}); step: {step}"
           f"; prefix cache: {'on' if engine.prefix_cache else 'off'}")
 
     if args.audit:

@@ -29,10 +29,15 @@ def make_context(
     scan_layers: bool = False,
     remat: bool = False,
     fuse_mlp_island: bool = False,
+    kv_axis: Optional[str] = None,
 ) -> TPContext:
     if mesh is None:
         return TPContext(mesh=None, policy=policy)
     axes = mesh.axis_names
+    if kv_axis is not None and kv_axis not in axes:
+        raise ValueError(
+            f"kv_axis {kv_axis!r} is not a mesh axis (have {axes}); build "
+            f"the mesh with make_kv_mesh or drop the pool sharding")
     data_axes = tuple(a for a in ("pod", "data") if a in axes)
     seq_axis = None
     if shape is not None and shape.global_batch < mesh.shape.get("data", 1):
@@ -44,6 +49,7 @@ def make_context(
         axis="model",
         data_axes=data_axes,
         seq_axis=seq_axis,
+        kv_axis=kv_axis,
         policy=policy,
         scan_layers=scan_layers,
         remat=remat,

@@ -211,7 +211,8 @@ def attention(
 
 
 def _paged_attend_kernel(q, pool_k, pool_v, tables, hist_len, q_pos,
-                         k_extra=None, v_extra=None, t_extra=None, *,
+                         k_extra=None, v_extra=None, t_extra=None,
+                         row_map=None, *,
                          cache_spec: KVCacheSpec, cfg: ModelConfig,
                          window: Optional[int]):
     """Route one paged read through the gather-free Pallas kernel
@@ -219,13 +220,15 @@ def _paged_attend_kernel(q, pool_k, pool_v, tables, hist_len, q_pos,
     VMEM with online softmax instead of gathering ``pool[tables]`` at full
     capacity through HBM, dequantizing MX wire blocks in-kernel. All three
     paged geometries (decode, chunk, mixed) land here; q is (R, Sq, H, hd)
-    and the return is (R, Sq, H*hd) in q's dtype."""
+    and the return is (R, Sq, H*hd) in q's dtype. ``row_map`` switches the
+    block-table walk to virtual-region addressing over an exchanged pool
+    (sequence-sharded read path)."""
     from repro.kernels.paged_attention import paged_attention
 
     R, Sq = q.shape[:2]
     return paged_attention(
         q.reshape(R, Sq, -1), pool_k, pool_v, tables, hist_len, q_pos,
-        k_extra, v_extra, t_extra,
+        k_extra, v_extra, t_extra, row_map,
         spec=cache_spec.mx, kv_heads=cfg.n_kv_heads,
         scale=cfg.head_dim**-0.5, window=window, out_dtype=q.dtype,
         interpret=jax.default_backend() == "cpu")
@@ -238,12 +241,60 @@ def quantize_kv_pages(k: jnp.ndarray, v: jnp.ndarray, spec) -> tuple:
     return mx.quantize(k, spec), mx.quantize(v, spec)
 
 
+def _kv_entry(ctx: TPContext):
+    """Block-dim spec entry for the paged pools: the kv axis once the pools
+    are sequence-sharded, else replicated."""
+    return ctx.kv_axis if ctx.kv_sharded else None
+
+
 def constrain_wire_pool(ctx: TPContext, pool: MXCompressed) -> MXCompressed:
     """Pin a wire-format pool to the canonical sharding (packed features over
-    the model axis, like the dense pools). Used by every pool producer so the
-    decode jit always sees one input sharding and compiles exactly once."""
+    the model axis, block dim over the kv axis when sequence-sharded — like
+    the dense pools). Used by every pool producer so the decode jit always
+    sees one input sharding and compiles exactly once."""
     a = ctx.axis if ctx.tp else None
-    return MXCompressed(*(constrain(ctx, arr, None, None, a) for arr in pool))
+    return MXCompressed(
+        *(constrain(ctx, arr, _kv_entry(ctx), None, a) for arr in pool))
+
+
+def _virtual_pools(ctx: TPContext, pool_k, pool_v, tables, quantized: bool):
+    """Sequence-sharded read half (DESIGN.md §Sequence-sharded pools):
+    exchange exactly the blocks named by ``tables`` — wire-format
+    (payload, scale) bytes for quantized pools, never the full pool — into
+    kv-replicated VIRTUAL pools laid out in table order,
+    ``V[r*nb + j] == pool[tables[r, j]]`` bit-for-bit. Downstream reads then
+    see the same values as the replicated path, so outputs stay
+    token-identical."""
+    from repro.core.tp import pool_exchange
+
+    if quantized:
+        kp, ks, vp, vs = pool_exchange(
+            ctx, [pool_k.payload, pool_k.scales, pool_v.payload,
+                  pool_v.scales], tables)
+        return MXCompressed(kp, ks), MXCompressed(vp, vs)
+    vk, vv = pool_exchange(ctx, [pool_k, pool_v], tables)
+    return vk, vv
+
+
+def _sharded_append(ctx: TPContext, pool_k, pool_v, k_vals, v_vals,
+                    blk, offs, quantized: bool):
+    """Sequence-sharded write half: communication-free drop-mode scatters —
+    each kv shard writes only the rows it owns (a GSPMD scatter on the
+    sharded block dim would be partitioned into ops XLA-CPU aborts on; see
+    the seq_axis note in ``attention``). ``k_vals``/``v_vals`` are the
+    per-position rows ((N, wire/dense width), already quantized/cast)."""
+    from repro.core.tp import pool_scatter
+
+    if quantized:
+        kp, ks, vp, vs = pool_scatter(
+            ctx, [(pool_k.payload, k_vals.payload),
+                  (pool_k.scales, k_vals.scales),
+                  (pool_v.payload, v_vals.payload),
+                  (pool_v.scales, v_vals.scales)], blk, offs)
+        return MXCompressed(kp, ks), MXCompressed(vp, vs)
+    pk, pv = pool_scatter(ctx, [(pool_k, k_vals), (pool_v, v_vals)],
+                          blk, offs)
+    return pk, pv
 
 
 def paged_attention_decode(
@@ -286,12 +337,16 @@ def paged_attention_decode(
     if quantized:
         mxs = cache_spec.mx
         kq, vq = quantize_kv_pages(k_new[:, 0], v_new[:, 0], mxs)
-        pool_k = MXCompressed(
-            payload=pool_k.payload.at[block_ids, offs].set(kq.payload),
-            scales=pool_k.scales.at[block_ids, offs].set(kq.scales))
-        pool_v = MXCompressed(
-            payload=pool_v.payload.at[block_ids, offs].set(vq.payload),
-            scales=pool_v.scales.at[block_ids, offs].set(vq.scales))
+        if ctx.kv_sharded:
+            pool_k, pool_v = _sharded_append(
+                ctx, pool_k, pool_v, kq, vq, block_ids, offs, True)
+        else:
+            pool_k = MXCompressed(
+                payload=pool_k.payload.at[block_ids, offs].set(kq.payload),
+                scales=pool_k.scales.at[block_ids, offs].set(kq.scales))
+            pool_v = MXCompressed(
+                payload=pool_v.payload.at[block_ids, offs].set(vq.payload),
+                scales=pool_v.scales.at[block_ids, offs].set(vq.scales))
         # every producer of wire pools (this decode write and the engine's
         # prefill-insert) must constrain them to the SAME spec, or the
         # decode jit sees a new input sharding on its second step and
@@ -299,30 +354,61 @@ def paged_attention_decode(
         pool_k = constrain_wire_pool(ctx, pool_k)
         pool_v = constrain_wire_pool(ctx, pool_v)
     else:
-        pool_k = pool_k.at[block_ids, offs].set(k_new[:, 0].astype(pool_k.dtype))
-        pool_v = pool_v.at[block_ids, offs].set(v_new[:, 0].astype(pool_v.dtype))
-        pool_k = constrain(ctx, pool_k, None, None, a)
-        pool_v = constrain(ctx, pool_v, None, None, a)
+        if ctx.kv_sharded:
+            pool_k, pool_v = _sharded_append(
+                ctx, pool_k, pool_v, k_new[:, 0].astype(pool_k.dtype),
+                v_new[:, 0].astype(pool_v.dtype), block_ids, offs, False)
+        else:
+            pool_k = pool_k.at[block_ids, offs].set(
+                k_new[:, 0].astype(pool_k.dtype))
+            pool_v = pool_v.at[block_ids, offs].set(
+                v_new[:, 0].astype(pool_v.dtype))
+        pool_k = constrain(ctx, pool_k, _kv_entry(ctx), None, a)
+        pool_v = constrain(ctx, pool_v, _kv_entry(ctx), None, a)
+
+    if ctx.kv_sharded:
+        # exchange the table-named blocks (post-write: decode history runs
+        # through the just-scattered token) into virtual pools; row b's
+        # region is b, so the virtual table walk is row_map[b] * nb + j
+        vpool_k, vpool_v = _virtual_pools(ctx, pool_k, pool_v, tables,
+                                          quantized)
 
     if cache_spec is not None and cache_spec.use_pallas:
         # gather-free read: the kernel walks each slot's block-table row; the
         # token just scattered above is already in the pool, so row b's
         # history runs to lengths[b] + 1 and no in-step extras are needed
-        out = _paged_attend_kernel(
-            q, pool_k, pool_v, tables, lengths + 1, lengths[:, None],
-            cache_spec=cache_spec, cfg=cfg, window=window)
+        if ctx.kv_sharded:
+            out = _paged_attend_kernel(
+                q, vpool_k, vpool_v, tables, lengths + 1, lengths[:, None],
+                row_map=jnp.arange(B, dtype=jnp.int32),
+                cache_spec=cache_spec, cfg=cfg, window=window)
+        else:
+            out = _paged_attend_kernel(
+                q, pool_k, pool_v, tables, lengths + 1, lengths[:, None],
+                cache_spec=cache_spec, cfg=cfg, window=window)
         out = constrain(ctx, out, ctx.batch, None, a)
         y = row_linear(ctx, out, params["wo"]["w"], n_tokens=B)
         return y, pool_k, pool_v
 
     if quantized:
-        # gathered wire pages, logical (B, T, wire) like the dense layout
-        k_pl = pool_k.payload[tables].reshape(B, -1, pool_k.payload.shape[-1])
-        k_sc = pool_k.scales[tables].reshape(B, -1, pool_k.scales.shape[-1])
-        v_pl = pool_v.payload[tables].reshape(B, -1, pool_v.payload.shape[-1])
-        v_sc = pool_v.scales[tables].reshape(B, -1, pool_v.scales.shape[-1])
+        # gathered wire pages, logical (B, T, wire) like the dense layout;
+        # the sharded virtual pool is already in table order (reshape, no
+        # gather — same values bit-for-bit as pool[tables])
+        if ctx.kv_sharded:
+            k_pl = vpool_k.payload.reshape(B, -1, vpool_k.payload.shape[-1])
+            k_sc = vpool_k.scales.reshape(B, -1, vpool_k.scales.shape[-1])
+            v_pl = vpool_v.payload.reshape(B, -1, vpool_v.payload.shape[-1])
+            v_sc = vpool_v.scales.reshape(B, -1, vpool_v.scales.shape[-1])
+        else:
+            k_pl = pool_k.payload[tables].reshape(B, -1, pool_k.payload.shape[-1])
+            k_sc = pool_k.scales[tables].reshape(B, -1, pool_k.scales.shape[-1])
+            v_pl = pool_v.payload[tables].reshape(B, -1, pool_v.payload.shape[-1])
+            v_sc = pool_v.scales[tables].reshape(B, -1, pool_v.scales.shape[-1])
         k_all = mx.dequantize(MXCompressed(k_pl, k_sc), mxs, out_dtype=q.dtype)
         v_all = mx.dequantize(MXCompressed(v_pl, v_sc), mxs, out_dtype=q.dtype)
+    elif ctx.kv_sharded:
+        k_all = vpool_k.reshape(B, -1, cfg.kv_dim)
+        v_all = vpool_v.reshape(B, -1, cfg.kv_dim)
     else:
         # (B, max_blocks, bs, kv) -> logical (B, T, kv); block j of a slot's
         # table holds that slot's positions [j*bs, (j+1)*bs)
@@ -393,27 +479,44 @@ def paged_attention_chunk(
 
     # read history BEFORE the append so the chunk's own K/V is counted once
     # (in compute precision as extras, not through the pool roundtrip)
+    if ctx.kv_sharded:
+        # one table row => one virtual region holding the slot's blocks in
+        # table order (exchanged pre-append, matching the read-then-write
+        # order of the replicated path)
+        vpool_k, vpool_v = _virtual_pools(ctx, pool_k, pool_v,
+                                          table_row[None], quantized)
     if cache_spec is not None and cache_spec.use_pallas:
         # gather-free read: one table row (R=1), history below ``start``,
         # the chunk itself folded in as compute-precision extras
         out = _paged_attend_kernel(
-            q, pool_k, pool_v, table_row[None],
+            q, vpool_k if ctx.kv_sharded else pool_k,
+            vpool_v if ctx.kv_sharded else pool_v, table_row[None],
             jnp.asarray(start, jnp.int32).reshape(1), p[None, :],
             k_new[0].astype(q.dtype), v_new[0].astype(q.dtype), p[None, :],
+            jnp.zeros((1,), jnp.int32) if ctx.kv_sharded else None,
             cache_spec=cache_spec, cfg=cfg, window=window)
     else:
         t_hist = jnp.arange(cap, dtype=jnp.int32)
         t_hist = jnp.where(t_hist < start, t_hist, _T_INVALID)
         if quantized:
             mxs = cache_spec.mx
-            k_hist = mx.dequantize(MXCompressed(
-                pool_k.payload[table_row].reshape(1, cap, -1),
-                pool_k.scales[table_row].reshape(1, cap, -1)), mxs,
-                out_dtype=q.dtype)
-            v_hist = mx.dequantize(MXCompressed(
-                pool_v.payload[table_row].reshape(1, cap, -1),
-                pool_v.scales[table_row].reshape(1, cap, -1)), mxs,
-                out_dtype=q.dtype)
+            if ctx.kv_sharded:
+                k_wire = MXCompressed(vpool_k.payload.reshape(1, cap, -1),
+                                      vpool_k.scales.reshape(1, cap, -1))
+                v_wire = MXCompressed(vpool_v.payload.reshape(1, cap, -1),
+                                      vpool_v.scales.reshape(1, cap, -1))
+            else:
+                k_wire = MXCompressed(
+                    pool_k.payload[table_row].reshape(1, cap, -1),
+                    pool_k.scales[table_row].reshape(1, cap, -1))
+                v_wire = MXCompressed(
+                    pool_v.payload[table_row].reshape(1, cap, -1),
+                    pool_v.scales[table_row].reshape(1, cap, -1))
+            k_hist = mx.dequantize(k_wire, mxs, out_dtype=q.dtype)
+            v_hist = mx.dequantize(v_wire, mxs, out_dtype=q.dtype)
+        elif ctx.kv_sharded:
+            k_hist = vpool_k.reshape(1, cap, -1).astype(q.dtype)
+            v_hist = vpool_v.reshape(1, cap, -1).astype(q.dtype)
         else:
             k_hist = pool_k[table_row].reshape(1, cap, -1).astype(q.dtype)
             v_hist = pool_v[table_row].reshape(1, cap, -1).astype(q.dtype)
@@ -429,17 +532,28 @@ def paged_attention_chunk(
     # decode write so the compiled programs agree on pool sharding
     if quantized:
         kq, vq = quantize_kv_pages(k_new[0], v_new[0], cache_spec.mx)
-        pool_k = constrain_wire_pool(ctx, MXCompressed(
-            payload=pool_k.payload.at[blk, offs].set(kq.payload),
-            scales=pool_k.scales.at[blk, offs].set(kq.scales)))
-        pool_v = constrain_wire_pool(ctx, MXCompressed(
-            payload=pool_v.payload.at[blk, offs].set(vq.payload),
-            scales=pool_v.scales.at[blk, offs].set(vq.scales)))
+        if ctx.kv_sharded:
+            pool_k, pool_v = _sharded_append(
+                ctx, pool_k, pool_v, kq, vq, blk, offs, True)
+            pool_k = constrain_wire_pool(ctx, pool_k)
+            pool_v = constrain_wire_pool(ctx, pool_v)
+        else:
+            pool_k = constrain_wire_pool(ctx, MXCompressed(
+                payload=pool_k.payload.at[blk, offs].set(kq.payload),
+                scales=pool_k.scales.at[blk, offs].set(kq.scales)))
+            pool_v = constrain_wire_pool(ctx, MXCompressed(
+                payload=pool_v.payload.at[blk, offs].set(vq.payload),
+                scales=pool_v.scales.at[blk, offs].set(vq.scales)))
     else:
-        pool_k = pool_k.at[blk, offs].set(k_new[0].astype(pool_k.dtype))
-        pool_v = pool_v.at[blk, offs].set(v_new[0].astype(pool_v.dtype))
-        pool_k = constrain(ctx, pool_k, None, None, a)
-        pool_v = constrain(ctx, pool_v, None, None, a)
+        if ctx.kv_sharded:
+            pool_k, pool_v = _sharded_append(
+                ctx, pool_k, pool_v, k_new[0].astype(pool_k.dtype),
+                v_new[0].astype(pool_v.dtype), blk, offs, False)
+        else:
+            pool_k = pool_k.at[blk, offs].set(k_new[0].astype(pool_k.dtype))
+            pool_v = pool_v.at[blk, offs].set(v_new[0].astype(pool_v.dtype))
+        pool_k = constrain(ctx, pool_k, _kv_entry(ctx), None, a)
+        pool_v = constrain(ctx, pool_v, _kv_entry(ctx), None, a)
 
     out = constrain(ctx, out, ctx.batch, None, a)
     y = row_linear(ctx, out, params["wo"]["w"], n_tokens=B * C)
@@ -518,27 +632,50 @@ def paged_attention_mixed(
     same = (slot_ids[None, :] == slot_ids[:, None]) & valid[None, :]
     t_step = jnp.where(same, positions[None, :], _T_INVALID)    # (T, T)
 
+    if ctx.kv_sharded:
+        # exchange ONE region per SLOT (not per token: T tokens share
+        # n_slots tables, so the wire moves n_slots * cap positions, the
+        # slots' resident context); token t's region is slot_ids[t]
+        vpool_k, vpool_v = _virtual_pools(ctx, pool_k, pool_v, tables,
+                                          quantized)
+
     if cache_spec is not None and cache_spec.use_pallas:
         # gather-free read: each flattened token walks its OWN slot's table
         # row in the kernel — the O(T * cap) pool[my_tables] HBM gather the
         # jnp path below pays never materializes. The step's in-batch K/V
         # rides along as extras with the (T, T) same-slot position mask.
         out = _paged_attend_kernel(
-            qt, pool_k, pool_v, my_tables, start, positions[:, None],
-            k_step, v_step, t_step,
+            qt, vpool_k if ctx.kv_sharded else pool_k,
+            vpool_v if ctx.kv_sharded else pool_v, my_tables, start,
+            positions[:, None], k_step, v_step, t_step,
+            slot_ids if ctx.kv_sharded else None,
             cache_spec=cache_spec, cfg=cfg, window=window)
     else:
         t_hist = jnp.arange(cap, dtype=jnp.int32)[None, :]      # (1, cap)
         t_hist = jnp.where(t_hist < start[:, None], t_hist, _T_INVALID)
         if quantized:
-            k_hist = mx.dequantize(MXCompressed(
-                pool_k.payload[my_tables].reshape(T, cap, -1),
-                pool_k.scales[my_tables].reshape(T, cap, -1)), mxs,
-                out_dtype=q.dtype)
-            v_hist = mx.dequantize(MXCompressed(
-                pool_v.payload[my_tables].reshape(T, cap, -1),
-                pool_v.scales[my_tables].reshape(T, cap, -1)), mxs,
-                out_dtype=q.dtype)
+            if ctx.kv_sharded:
+                # per-slot virtual regions -> per-token rows: a gather over
+                # the (n_slots, cap, wire) exchange buffer, never the pool
+                k_wire = MXCompressed(
+                    vpool_k.payload.reshape(tables.shape[0], cap, -1)[slot_ids],
+                    vpool_k.scales.reshape(tables.shape[0], cap, -1)[slot_ids])
+                v_wire = MXCompressed(
+                    vpool_v.payload.reshape(tables.shape[0], cap, -1)[slot_ids],
+                    vpool_v.scales.reshape(tables.shape[0], cap, -1)[slot_ids])
+            else:
+                k_wire = MXCompressed(
+                    pool_k.payload[my_tables].reshape(T, cap, -1),
+                    pool_k.scales[my_tables].reshape(T, cap, -1))
+                v_wire = MXCompressed(
+                    pool_v.payload[my_tables].reshape(T, cap, -1),
+                    pool_v.scales[my_tables].reshape(T, cap, -1))
+            k_hist = mx.dequantize(k_wire, mxs, out_dtype=q.dtype)
+            v_hist = mx.dequantize(v_wire, mxs, out_dtype=q.dtype)
+        elif ctx.kv_sharded:
+            ns = tables.shape[0]
+            k_hist = vpool_k.reshape(ns, cap, -1)[slot_ids].astype(q.dtype)
+            v_hist = vpool_v.reshape(ns, cap, -1)[slot_ids].astype(q.dtype)
         else:
             k_hist = pool_k[my_tables].reshape(T, cap, -1).astype(q.dtype)
             v_hist = pool_v[my_tables].reshape(T, cap, -1).astype(q.dtype)
@@ -562,17 +699,28 @@ def paged_attention_mixed(
                     0)
     offs = positions % bs
     if quantized:
-        pool_k = constrain_wire_pool(ctx, MXCompressed(
-            payload=pool_k.payload.at[blk, offs].set(kq.payload),
-            scales=pool_k.scales.at[blk, offs].set(kq.scales)))
-        pool_v = constrain_wire_pool(ctx, MXCompressed(
-            payload=pool_v.payload.at[blk, offs].set(vq.payload),
-            scales=pool_v.scales.at[blk, offs].set(vq.scales)))
+        if ctx.kv_sharded:
+            pool_k, pool_v = _sharded_append(
+                ctx, pool_k, pool_v, kq, vq, blk, offs, True)
+            pool_k = constrain_wire_pool(ctx, pool_k)
+            pool_v = constrain_wire_pool(ctx, pool_v)
+        else:
+            pool_k = constrain_wire_pool(ctx, MXCompressed(
+                payload=pool_k.payload.at[blk, offs].set(kq.payload),
+                scales=pool_k.scales.at[blk, offs].set(kq.scales)))
+            pool_v = constrain_wire_pool(ctx, MXCompressed(
+                payload=pool_v.payload.at[blk, offs].set(vq.payload),
+                scales=pool_v.scales.at[blk, offs].set(vq.scales)))
     else:
-        pool_k = pool_k.at[blk, offs].set(k_new[0].astype(pool_k.dtype))
-        pool_v = pool_v.at[blk, offs].set(v_new[0].astype(pool_v.dtype))
-        pool_k = constrain(ctx, pool_k, None, None, a)
-        pool_v = constrain(ctx, pool_v, None, None, a)
+        if ctx.kv_sharded:
+            pool_k, pool_v = _sharded_append(
+                ctx, pool_k, pool_v, k_new[0].astype(pool_k.dtype),
+                v_new[0].astype(pool_v.dtype), blk, offs, False)
+        else:
+            pool_k = pool_k.at[blk, offs].set(k_new[0].astype(pool_k.dtype))
+            pool_v = pool_v.at[blk, offs].set(v_new[0].astype(pool_v.dtype))
+        pool_k = constrain(ctx, pool_k, _kv_entry(ctx), None, a)
+        pool_v = constrain(ctx, pool_v, _kv_entry(ctx), None, a)
 
     out = constrain(ctx, out, ctx.batch, None, a)
     y = row_linear(ctx, out, params["wo"]["w"], n_tokens=B * T)

@@ -58,7 +58,9 @@ import numpy as np
 from repro.core.formats import KVCacheSpec, MXSpec
 from repro.core.mx import MXCompressed
 from repro.core.policy import NO_COMPRESSION
-from repro.core.tp import TPContext, constrain
+from repro.core.tp import (
+    TPContext, constrain, pool_block_copy, pool_block_fill, pool_block_write,
+)
 from repro.models.attention import constrain_wire_pool, quantize_kv_pages
 from repro.models.model import Model
 from repro.serving.errors import (
@@ -257,6 +259,13 @@ class Engine:
         # full provisioning by default (+1 for the reserved null block);
         # pass a smaller n_blocks to exercise eviction under memory pressure
         self.n_blocks = n_blocks or (self.n_slots * self.max_blocks + 1)
+        # sequence-sharded pools (DESIGN.md §Sequence-sharded pools): when
+        # the context carries a kv axis, each device on it owns a contiguous
+        # capacity/kv_shards slice of the pool's block dimension, so capacity
+        # must divide evenly — round UP (never shrink what the caller sized)
+        self.kv_shards = ctx.kv_shards
+        if self.n_blocks % self.kv_shards:
+            self.n_blocks += self.kv_shards - self.n_blocks % self.kv_shards
         self.cache_dtype = cache_dtype
         # KV pool storage format: dense cache_dtype (default, bit-identical
         # to the pre-quantization engine) or MX wire format (DESIGN.md
@@ -417,9 +426,10 @@ class Engine:
         # to, so the FIRST consumer of a reset state sees the same input
         # layout as every later call and never compiles a second variant
         a = ctx.axis if ctx.tp else None
+        kv0 = ctx.kv_axis if ctx.kv_sharded else None
         pin1 = lambda p: (constrain_wire_pool(ctx, p)
                           if isinstance(p, MXCompressed)
-                          else constrain(ctx, p, None, None, a))
+                          else constrain(ctx, p, kv0, None, a))
         self._pin_state = jax.jit(lambda state: {
             **state,
             "pools_k": [pin1(p) for p in state["pools_k"]],
@@ -494,7 +504,8 @@ class Engine:
         self.prefix_index = (PrefixIndex(self.block_size)
                              if self.prefix_cache else None)
         self.allocator = BlockAllocator(self.n_blocks,
-                                        prefix_index=self.prefix_index)
+                                        prefix_index=self.prefix_index,
+                                        shards=self.kv_shards)
         self._state = self._pin_state(
             init_paged_state(self.cfg, self.n_slots, self.n_blocks,
                              self.block_size, self.cache_dtype,
@@ -515,6 +526,11 @@ class Engine:
         # stall/thrash guards (docs/serving.md §Failure modes & recovery)
         self._step_i = 0
         self._stall = 0
+        # capacity telemetry (benchmarks/serve_throughput.py long-context
+        # mode): peak per-slot context length and peak live pool blocks
+        # observed over the run's steps
+        self.max_resident_ctx = 0
+        self.max_resident_blocks = 0
         self._hold_until = 0         # step at which fault-held blocks return
         self._step_preempts = 0
         self._preempt_window: collections.deque = collections.deque(
@@ -554,13 +570,20 @@ class Engine:
         return [("compressed" if g else "dense")
                 for g in sorted(self._mixed_fns)]
 
-    def kv_pool_bytes(self) -> int:
-        """Device bytes held by this engine's attention KV pools (payload +
-        scales for quantized pools, dense dtype bytes otherwise)."""
+    def kv_pool_bytes(self, *, per_device: bool = False) -> int:
+        """Bytes held by this engine's attention KV pools (payload + scales
+        for quantized pools, dense dtype bytes otherwise).
+
+        ``per_device=False`` (default) is the logical pool footprint — what
+        the engine can address. ``per_device=True`` is what ONE device
+        actually holds: with sequence-sharded pools each kv shard resides
+        ``1/kv_shards`` of the blocks, so the same per-device HBM budget
+        buys ``kv_shards`` times the addressable context."""
         return paged_cache_bytes(
             self.cfg, self.n_blocks, self.block_size,
             dtype_bytes=jnp.dtype(self.cache_dtype).itemsize,
-            cache_spec=self.cache_spec)
+            cache_spec=self.cache_spec, kv_shards=self.kv_shards,
+            per_device=per_device)
 
     # ------------------------------------------------------- shape bucketing
 
@@ -629,12 +652,30 @@ class Engine:
                     v = jnp.pad(c.v[0], ((0, pad), (0, 0))).reshape(nb, bs, -1)
                     if cache_spec.quantized:
                         kq, vq = quantize_kv_pages(k, v, cache_spec.mx)
-                        pools_k[ai] = constrain_wire_pool(self.ctx, MXCompressed(
-                            payload=pools_k[ai].payload.at[block_ids].set(kq.payload),
-                            scales=pools_k[ai].scales.at[block_ids].set(kq.scales)))
-                        pools_v[ai] = constrain_wire_pool(self.ctx, MXCompressed(
-                            payload=pools_v[ai].payload.at[block_ids].set(vq.payload),
-                            scales=pools_v[ai].scales.at[block_ids].set(vq.scales)))
+                        if self.ctx.kv_sharded:
+                            # sharded pools: each kv shard writes only the
+                            # blocks it owns and drops the rest (no wire)
+                            kp, ks, vp, vs = pool_block_write(self.ctx, [
+                                (pools_k[ai].payload, kq.payload),
+                                (pools_k[ai].scales, kq.scales),
+                                (pools_v[ai].payload, vq.payload),
+                                (pools_v[ai].scales, vq.scales)], block_ids)
+                            pools_k[ai] = constrain_wire_pool(
+                                self.ctx, MXCompressed(payload=kp, scales=ks))
+                            pools_v[ai] = constrain_wire_pool(
+                                self.ctx, MXCompressed(payload=vp, scales=vs))
+                        else:
+                            pools_k[ai] = constrain_wire_pool(self.ctx, MXCompressed(
+                                payload=pools_k[ai].payload.at[block_ids].set(kq.payload),
+                                scales=pools_k[ai].scales.at[block_ids].set(kq.scales)))
+                            pools_v[ai] = constrain_wire_pool(self.ctx, MXCompressed(
+                                payload=pools_v[ai].payload.at[block_ids].set(vq.payload),
+                                scales=pools_v[ai].scales.at[block_ids].set(vq.scales)))
+                    elif self.ctx.kv_sharded:
+                        pools_k[ai], pools_v[ai] = pool_block_write(self.ctx, [
+                            (pools_k[ai], k.astype(pools_k[ai].dtype)),
+                            (pools_v[ai], v.astype(pools_v[ai].dtype)),
+                        ], block_ids)
                     else:
                         pools_k[ai] = pools_k[ai].at[block_ids].set(
                             k.astype(pools_k[ai].dtype))
@@ -661,8 +702,25 @@ class Engine:
         """Copy block ``src``'s content to block ``dst`` in every attention
         layer's K/V pool (wire payload+scales pairs when quantized). Same
         constrain discipline as the other pool producers so downstream
-        programs keep their compile-once input shardings."""
+        programs keep their compile-once input shardings. On sharded pools
+        the fork is one masked-psum broadcast of the src block from its
+        owner plus a drop-write at dst — one block of wire per pool plane,
+        independent of capacity."""
         a = self.ctx.axis if self.ctx.tp else None
+        if self.ctx.kv_sharded:
+            pools = list(state["pools_k"]) + list(state["pools_v"])
+            kv0 = self.ctx.kv_axis
+            if self.cache_spec.quantized:
+                planes = [pl for p in pools for pl in (p.payload, p.scales)]
+                out = pool_block_copy(self.ctx, planes, src, dst)
+                new = [constrain_wire_pool(self.ctx, MXCompressed(
+                           payload=out[i], scales=out[i + 1]))
+                       for i in range(0, len(out), 2)]
+            else:
+                out = pool_block_copy(self.ctx, pools, src, dst)
+                new = [constrain(self.ctx, p, kv0, None, a) for p in out]
+            n = len(state["pools_k"])
+            return {**state, "pools_k": new[:n], "pools_v": new[n:]}
         copy1 = lambda p: (
             constrain_wire_pool(self.ctx, MXCompressed(
                 payload=p.payload.at[dst].set(p.payload[src]),
@@ -679,8 +737,24 @@ class Engine:
         (255 -> 2^128, so dequant overflows to inf/NaN); dense pools get
         NaN directly. Same constrain discipline as the other pool
         producers, so the corrupted state re-enters the step programs
-        without a recompile."""
+        without a recompile. On sharded pools only the shard owning
+        ``block`` writes the poison (communication-free drop-write)."""
         a = self.ctx.axis if self.ctx.tp else None
+        if self.ctx.kv_sharded:
+            pools = list(state["pools_k"]) + list(state["pools_v"])
+            kv0 = self.ctx.kv_axis
+            n = len(state["pools_k"])
+            if self.cache_spec.quantized:
+                out = pool_block_fill(
+                    self.ctx, [(p.scales, 255) for p in pools], block)
+                new = [constrain_wire_pool(self.ctx, MXCompressed(
+                           payload=p.payload, scales=s))
+                       for p, s in zip(pools, out)]
+            else:
+                out = pool_block_fill(
+                    self.ctx, [(p, jnp.nan) for p in pools], block)
+                new = [constrain(self.ctx, p, kv0, None, a) for p in out]
+            return {**state, "pools_k": new[:n], "pools_v": new[n:]}
         poison1 = lambda p: (
             constrain_wire_pool(self.ctx, MXCompressed(
                 payload=p.payload,
@@ -1393,7 +1467,14 @@ class Engine:
         (``stall_limit`` consecutive zero-token steps with requests in
         flight raises StepStuck; fault-held pool pressure is exempt since
         it expires on schedule), and the thrash detector (preemptions over
-        the rolling window past ``thrash_limit`` set degraded mode)."""
+        the rolling window past ``thrash_limit`` set degraded mode). Also
+        records the run's capacity peaks (``max_resident_ctx`` /
+        ``max_resident_blocks``)."""
+        self.max_resident_ctx = max(self.max_resident_ctx,
+                                    int(self._lengths.max(initial=0)))
+        self.max_resident_blocks = max(
+            self.max_resident_blocks,
+            self.n_blocks - 1 - self.allocator.n_free)
         if self.step_timeout_s is not None and elapsed_s > self.step_timeout_s:
             raise StepStuck(
                 f"engine step {self._step_i} took {elapsed_s:.3f}s "
@@ -1503,6 +1584,7 @@ class Engine:
                 retrace=lambda: jax.make_jaxpr(fn)(*args),
                 pool_avals=pool_avals,
                 kernel_read_path=self.cache_spec.use_pallas,
+                kv_shards=self.kv_shards, kv_axis=self.ctx.kv_axis,
                 prefill_dominated=prefill_dominated)
 
         model, cache_spec = self.model, self.cache_spec

@@ -235,23 +235,68 @@ class BlockAllocator:
     scheduler bug that over-releases (or releases the reserved null block /
     a garbage id) would silently hand one block to two requests, corrupting
     both of their KV sequences.
+
+    Sequence-sharded pools (``shards > 1``, DESIGN.md §Sequence-sharded
+    pools): the pool's block dim is split contiguously over a kv mesh axis,
+    so a global id maps to ``(shard_of(b), b % per_shard)`` and the
+    allocator keeps ONE free deque per shard, handing blocks out round-robin
+    across shards for residency balance. ``release``/``unhold``/lazy reclaim
+    return every id to its owning shard's deque, so per-shard free counts
+    conserve exactly (each shard's free + held + referenced + cached blocks
+    always sum to its capacity). ``shards == 1`` reduces to a single FIFO
+    deque — byte-identical to the unsharded allocator.
     """
 
-    def __init__(self, n_blocks: int, prefix_index: Optional[PrefixIndex] = None):
+    def __init__(self, n_blocks: int, prefix_index: Optional[PrefixIndex] = None,
+                 *, shards: int = 1):
         assert n_blocks >= 2, "need at least one allocatable block"
+        assert shards >= 1 and n_blocks % shards == 0, (
+            f"pool capacity {n_blocks} must divide over {shards} kv shards")
         self.n_blocks = n_blocks
+        self.shards = shards
+        self.per_shard = n_blocks // shards
         self.index = prefix_index
-        self._free = collections.deque(range(1, n_blocks))
-        self._free_set = set(self._free)   # O(1) membership / double-release
+        self._free: List[collections.deque] = \
+            [collections.deque() for _ in range(shards)]
+        for b in range(1, n_blocks):
+            self._free[b // self.per_shard].append(b)
+        self._free_set = set(range(1, n_blocks))  # O(1) membership
+        self._cursor = 0                   # next shard to hand a block from
         self._ref: Dict[int, int] = {}     # block id -> live reference count
         self._held: List[int] = []         # fault-injection holds (see hold())
         self.high_water = 0  # max blocks simultaneously referenced (stats)
+
+    def shard_of(self, block: int) -> int:
+        """Owning kv shard of a global block id (contiguous split)."""
+        return int(block) // self.per_shard
+
+    @property
+    def free_per_shard(self) -> List[int]:
+        """Free-list length per kv shard (conservation/balance checks)."""
+        return [len(d) for d in self._free]
+
+    def _pop_free(self, n: int) -> List[int]:
+        """Pop ``n`` free ids round-robin across shards (skipping dry ones);
+        the caller guarantees ``n <= n_free``. One shard => plain FIFO."""
+        ids = []
+        for _ in range(n):
+            for _ in range(self.shards):
+                d = self._free[self._cursor]
+                self._cursor = (self._cursor + 1) % self.shards
+                if d:
+                    ids.append(d.popleft())
+                    break
+        return ids
+
+    def _push_free(self, block: int) -> None:
+        self._free[self.shard_of(block)].append(block)
+        self._free_set.add(block)
 
     @property
     def n_free(self) -> int:
         """Immediately allocatable blocks (free list only — cached blocks
         are reclaimed lazily on top of these, see ``n_available``)."""
-        return len(self._free)
+        return len(self._free_set)
 
     @property
     def n_cached(self) -> int:
@@ -261,12 +306,12 @@ class BlockAllocator:
     @property
     def n_available(self) -> int:
         """Upper bound ``alloc`` can satisfy: free + lazily evictable."""
-        return len(self._free) + self.n_cached
+        return self.n_free + self.n_cached
 
     @property
     def n_allocated(self) -> int:
         """Blocks with at least one live reference."""
-        return (self.n_blocks - 1) - len(self._free) - self.n_cached \
+        return (self.n_blocks - 1) - self.n_free - self.n_cached \
             - len(self._held)
 
     @property
@@ -286,9 +331,8 @@ class BlockAllocator:
         Held blocks only move between the free list and the hold — never
         through refcounts or the prefix index — so the free list conserves
         exactly when ``unhold`` returns them."""
-        take = len(self._free) if n <= 0 else min(n, len(self._free))
-        for _ in range(take):
-            b = self._free.popleft()
+        take = self.n_free if n <= 0 else min(n, self.n_free)
+        for b in self._pop_free(take):
             self._free_set.discard(b)
             self._held.append(b)
         return take
@@ -298,8 +342,7 @@ class BlockAllocator:
         recovery). Returns the number released back."""
         n = len(self._held)
         for b in self._held:
-            self._free.append(b)
-            self._free_set.add(b)
+            self._push_free(b)
         self._held.clear()
         return n
 
@@ -309,11 +352,10 @@ class BlockAllocator:
         recycled (coldest-first) only to cover a shortfall."""
         if n > self.n_available:
             return None
-        if n > len(self._free):  # lazy reclaim: only under actual pressure
-            for b in self.index.pop_lru(n - len(self._free)):
-                self._free.append(b)
-                self._free_set.add(b)
-        ids = [self._free.popleft() for _ in range(n)]
+        if n > self.n_free:  # lazy reclaim: only under actual pressure
+            for b in self.index.pop_lru(n - self.n_free):
+                self._push_free(b)
+        ids = self._pop_free(n)
         self._free_set.difference_update(ids)
         for b in ids:
             self._ref[b] = 1
@@ -381,8 +423,7 @@ class BlockAllocator:
                 if self.index is not None and self.index.contains_block(b):
                     self.index.deactivate(b)   # keep bytes for future hits
                 else:
-                    self._free_set.add(b)
-                    self._free.append(b)
+                    self._push_free(b)
 
 
 def attn_layer_count(cfg: ModelConfig) -> int:
@@ -531,15 +572,23 @@ def init_paged_state(cfg: ModelConfig, n_slots: int, n_blocks: int,
 
 def paged_cache_bytes(cfg: ModelConfig, n_blocks: int, block_size: int,
                       dtype_bytes: int = 2,
-                      cache_spec: Optional[KVCacheSpec] = None) -> int:
-    """Device bytes held by the paged pools (the engine's KV budget).
+                      cache_spec: Optional[KVCacheSpec] = None, *,
+                      kv_shards: int = 1, per_device: bool = False) -> int:
+    """Bytes held by the paged pools (the engine's KV budget).
 
     Dense pools cost ``kv_dim * dtype_bytes`` per position; quantized pools
     cost the wire bytes (bit-packed payload + one scale byte per MX block).
+
+    With sequence-sharded pools each device holds only
+    ``n_blocks / kv_shards`` blocks: ``per_device=True`` returns that
+    per-device footprint (the number equal-HBM-budget comparisons must
+    equalize), the default returns the global pool bytes across the kv axis
+    (kv_shards x larger once sharded).
     """
     cache_spec = KVCacheSpec.parse(cache_spec)
     if cache_spec.quantized:
         pos_bytes = cache_spec.mx.wire_bytes(cfg.kv_dim)
     else:
         pos_bytes = cfg.kv_dim * dtype_bytes
-    return 2 * attn_layer_count(cfg) * n_blocks * block_size * pos_bytes
+    total = 2 * attn_layer_count(cfg) * n_blocks * block_size * pos_bytes
+    return total // kv_shards if per_device else total

@@ -40,6 +40,13 @@ Rules (each owns a ``Finding.rule`` id; DESIGN.md §Static analysis):
   whole point of the gather-free kernel is that pool reads happen block-by
   -block inside the ``pallas_call``. Any ``gather`` eqn whose operand aval
   matches a pool leaf turns the audit red.
+- ``pool-reshard`` — on a sequence-sharded-pool engine (``kv_shards > 1``),
+  per-step programs must never materialize a full-capacity replicated pool:
+  no ``all_gather`` over the kv axis with a pool-slab operand (that IS the
+  replication the sharding exists to avoid — the legit exchange moves only
+  table-named blocks via masked psum, so its operands are table-sized), and
+  no ``gather`` over a full-pool aval (a replicated ``pool[tables]`` read
+  can only exist if the pool was first reassembled).
 
 Recursion covers ``pallas_call`` eqns too: their kernel jaxpr rides in
 ``eqn.params`` like any other call primitive (``_sub_jaxprs`` is
@@ -292,6 +299,57 @@ def _check_pool_gather(trace: ProgramTrace, findings: List[Finding]) -> None:
             return
 
 
+def _check_pool_reshard(trace: ProgramTrace, findings: List[Finding]) -> None:
+    """On a sequence-sharded-pool engine, a per-step program must never
+    rebuild a replicated pool. Two signatures turn the audit red:
+
+    * an ``all_gather`` over the kv axis whose operand leads with a pool
+      slab's (blocks, block_size) head — full-capacity replication on the
+      wire. The legit read-side exchange (``pool_exchange``) is a masked
+      ``psum`` over TABLE-sized operands (resident blocks, never capacity),
+      so it can't match.
+    * a ``gather`` whose operand is a full-pool aval — ``pool[tables]``
+      against a replicated pool, which on a ``kv_shards > 1`` engine means
+      the pool was first reassembled somewhere upstream. (The sharded jnp
+      oracle reads the exchanged VIRTUAL pool, whose aval is table-shaped.)
+    """
+    if not (trace.is_step and trace.kv_shards > 1 and trace.pool_avals):
+        return
+    pools = set(trace.pool_avals)
+    slab_heads = set()
+    for shape, dt in pools:
+        if len(shape) >= 2:
+            slab_heads.add(((shape[0], shape[1]), dt))
+            slab_heads.add(((shape[0] // trace.kv_shards, shape[1]), dt))
+    for eqn in iter_eqns(trace.jaxpr):
+        name = eqn.primitive.name
+        if not eqn.invars:
+            continue
+        aval = getattr(eqn.invars[0], "aval", None)
+        if aval is None or not hasattr(aval, "shape"):
+            continue
+        if (name == "all_gather" and trace.kv_axis in _eqn_axes(eqn)
+                and len(aval.shape) >= 2
+                and ((aval.shape[0], aval.shape[1]),
+                     str(aval.dtype)) in slab_heads):
+            findings.append(Finding(
+                "pool-reshard", trace.name,
+                f"all_gather over kv axis {trace.kv_axis!r} with pool-slab "
+                f"operand {tuple(aval.shape)} {aval.dtype} — a per-step "
+                f"program re-replicating the sharded pool at full capacity; "
+                f"the exchange must move only table-named blocks"))
+            return
+        if (name == "gather"
+                and (tuple(aval.shape), str(aval.dtype)) in pools):
+            findings.append(Finding(
+                "pool-reshard", trace.name,
+                f"gather over a full-capacity pool aval "
+                f"{(tuple(aval.shape), str(aval.dtype))} in a kv-sharded "
+                f"step program — pool[tables] against a replicated pool "
+                f"implies the {trace.kv_shards}-way sharding was undone"))
+            return
+
+
 def _check_retrace(trace: ProgramTrace, findings: List[Finding]) -> None:
     if trace.retrace is None:
         return
@@ -315,6 +373,7 @@ def audit_program(trace: ProgramTrace) -> ProgramReport:
     _check_dtype_drift(trace, findings)
     _check_host_transfer(trace, findings)
     _check_pool_gather(trace, findings)
+    _check_pool_reshard(trace, findings)
     _check_retrace(trace, findings)
     return ProgramReport(name=trace.name, collectives=tp_records,
                          findings=findings, compressed_expected=expected,

@@ -79,6 +79,10 @@ class ProgramTrace:
     pool_avals: Tuple[Tuple[Tuple[int, ...], str], ...] = ()
     kernel_read_path: bool = False      # cache_spec.use_pallas: reads must be
                                         # gather-free (kernels/paged_attention)
+    kv_shards: int = 1                  # sequence-sharded pools: devices the
+                                        # pool block dim is split over (1 =
+                                        # replicated pools)
+    kv_axis: Optional[str] = None       # mesh axis carrying the pool shards
     prefill_dominated: bool = False     # this program serves prefill-dominated
                                         # steps: under an active policy the
                                         # compressed wire must be PRESENT

@@ -172,7 +172,7 @@ def test_block_freelist_reuse_after_eviction(small_model):
     assert tiny.allocator.high_water <= tiny.n_blocks - 1
     # conservation through the preempt-readmit-finish cycle: every id is
     # back exactly once, none lost, none duplicated, null block never listed
-    free_ids = list(tiny.allocator._free)
+    free_ids = [b for d in tiny.allocator._free for b in d]
     assert sorted(free_ids) == list(range(1, tiny.n_blocks))
     assert tiny.allocator._free_set == set(free_ids)
     big = Engine(model, params, CTX, max_slots=2, max_len=64,

@@ -44,7 +44,7 @@ def test_share_release_conservation():
     a.release(ids[:1])
     assert a.n_free == 9 and a.n_allocated == 0
     # conservation: every id back exactly once
-    assert sorted(a._free) == list(range(1, 10))
+    assert sorted(b for d in a._free for b in d) == list(range(1, 10))
 
 
 def test_release_beyond_refcount_rejected():

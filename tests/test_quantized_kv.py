@@ -218,5 +218,6 @@ def test_engine_quantized_cache_survives_eviction(small_model):
     for r in out:
         assert r.output.shape == (30,)
     assert eng.allocator.n_free == eng.n_blocks - 1
-    assert len(set(eng.allocator._free)) == len(eng.allocator._free)
-    assert eng.allocator._free_set == set(eng.allocator._free)
+    free_ids = [b for d in eng.allocator._free for b in d]
+    assert len(set(free_ids)) == len(free_ids)
+    assert eng.allocator._free_set == set(free_ids)

@@ -290,6 +290,69 @@ def test_pool_gather_on_kernel_engine_is_red(small_model):
                    for f in audit_program(t).findings)
 
 
+def test_pool_reshard_mutation_is_red(small_model):
+    """Mutation for the pool-reshard rule's gather signature: flag a
+    REPLICATED jnp engine's step traces as kv-sharded and the full-capacity
+    ``pool[tables]`` gathers they legitimately contain must turn the audit
+    red — on a ``kv_shards > 1`` engine a replicated-pool read can only
+    exist if the sharding was undone upstream. Unmutated traces (kv_shards
+    == 1) and off-step programs stay green."""
+    _, model, params = small_model
+
+    def engine():
+        return Engine(model, params, TPContext(mesh=None), max_slots=2,
+                      max_len=64, cache_dtype=jnp.float32,
+                      cache_spec="fp4_e2m1", prefill_chunk=8)
+
+    for name, trace in engine().trace_programs().items():
+        assert not any(f.rule == "pool-reshard"
+                       for f in audit_program(trace).findings), name
+
+    red = {}
+    for name, trace in engine().trace_programs().items():
+        trace.kv_shards, trace.kv_axis = 2, "kv"       # the mutation
+        red[name] = [f for f in audit_program(trace).findings
+                     if f.rule == "pool-reshard"]
+    assert red["mixed"] and red["decode"], red
+    # off-step programs (insert/COW block moves) are outside the rule
+    traces = engine().trace_programs(prompt_len=16)
+    t = traces["insert"]
+    t.kv_shards, t.kv_axis = 2, "kv"
+    assert not any(f.rule == "pool-reshard"
+                   for f in audit_program(t).findings)
+
+
+def test_pool_reshard_allgather_is_red():
+    """The rule's other signature: an ``all_gather`` over the kv axis whose
+    operand leads with a pool slab's (blocks, block_size) head is
+    full-capacity replication on the wire — red even handcrafted on a
+    1-device 'kv' mesh (the slab-head set includes the full-capacity head
+    precisely so a size-1 axis trace still matches). The legit masked-psum
+    exchange moves TABLE-sized operands and stays green."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.staticcheck.report import ProgramTrace
+
+    kv_mesh = compat.make_mesh((1,), ("kv",))
+    pool = jnp.zeros((8, 16, 4), jnp.float32)
+
+    def reshard_findings(body):
+        fn = lambda p: compat.shard_map(body, mesh=kv_mesh,
+                                        in_specs=P(), out_specs=P())(p)
+        trace = ProgramTrace(
+            name="decode", jaxpr=jax.make_jaxpr(fn)(pool), policy=None,
+            n_tokens=1, compute_dtype="float32", is_step=True,
+            axis_sizes={"kv": 1}, pool_avals=(((8, 16, 4), "float32"),),
+            kv_shards=2, kv_axis="kv")
+        return [f for f in audit_program(trace).findings
+                if f.rule == "pool-reshard"]
+
+    red = reshard_findings(lambda p: jax.lax.all_gather(p, "kv", tiled=True))
+    assert red, "full-pool all_gather over the kv axis must be red"
+    # masked-psum exchange over a table-sized slice: never capacity-shaped
+    assert not reshard_findings(lambda p: jax.lax.psum(p[:3], "kv"))
+
+
 def test_state_dtype_drift_is_red(small_model):
     """A program whose output state avals differ from its input state avals
     (pool storage format change mid-flight) is flagged."""
